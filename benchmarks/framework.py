@@ -1,0 +1,151 @@
+"""Framework benchmarks: kernel throughput + end-to-end step timings (CPU
+container; TPU numbers come from the dry-run roofline in EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, n=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6, out
+
+
+def bench_cim_kernels():
+    """cim_matmul / adc_quant Pallas kernels (interpret) vs jnp oracle."""
+    from repro.kernels import ref
+    from repro.kernels.cim_matmul import adc_quant_pallas, cim_matmul_pallas
+
+    rows = []
+    m, k, n = 256, 1024, 256
+    xi = jnp.round(jax.random.normal(jax.random.PRNGKey(0), (m, k)) * 30)
+    wi = jnp.round(jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 30)
+
+    us_k, y_k = _time(
+        lambda a, b: cim_matmul_pallas(a, b, rows=128, adc_bits=8, interpret=True),
+        xi, wi,
+    )
+    us_r, y_r = _time(
+        lambda a, b: ref.cim_matmul_ref(a, b, rows=128, adc_bits=8), xi, wi
+    )
+    err = float(jnp.abs(y_k - y_r).max())
+    flops = 2 * m * k * n
+    rows.append(
+        (
+            "kernel/cim_matmul_fakequant_256x1024x256",
+            us_k,
+            f"ref_us={us_r:.0f};maxerr={err:.1e};gflops_interp={flops / us_k / 1e3:.2f}",
+        )
+    )
+
+    v = jax.random.uniform(jax.random.PRNGKey(2), (1024, 1024))
+    us_q, _ = _time(lambda v: adc_quant_pallas(v, bits=5, interpret=True), v)
+    us_qr, _ = _time(lambda v: ref.adc_quant_ref(v, 5), v)
+    rows.append(("kernel/adc_quant_1Melem", us_q, f"ref_us={us_qr:.0f}"))
+
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    b, h, kv, s_, hd = 1, 4, 2, 512, 64
+    q = jax.random.normal(jax.random.PRNGKey(3), (b, h, s_, hd))
+    kk = jax.random.normal(jax.random.PRNGKey(4), (b, kv, s_, hd))
+    vv = jax.random.normal(jax.random.PRNGKey(5), (b, kv, s_, hd))
+    us_f, of = _time(lambda a, b_, c: flash_attention_pallas(a, b_, c, causal=True, interpret=True), q, kk, vv)
+    us_fr, orf = _time(lambda a, b_, c: ref.flash_attention_ref(a, b_, c, causal=True), q, kk, vv)
+    err = float(jnp.abs(of - orf).max())
+    rows.append(("kernel/flash_attention_512", us_f, f"ref_us={us_fr:.0f};maxerr={err:.1e}"))
+    return rows
+
+
+def bench_train_step():
+    """Reduced-config LM train step per arch family (CPU wall time)."""
+    from repro.configs import ARCHS, reduced
+    from repro.models import build_model
+
+    rows = []
+    for name in ("smollm-135m", "qwen3-moe-30b-a3b", "mamba2-130m", "zamba2-7b"):
+        cfg = reduced(ARCHS[name])
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        b, s = 4, 128
+        if cfg.input_kind == "embeddings":
+            inputs = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model))
+        else:
+            inputs = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+        batch = {
+            "inputs": inputs,
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab),
+        }
+        step = jax.jit(jax.value_and_grad(lambda p: model.loss_fn(p, batch)[0]))
+        us, (loss, _) = _time(lambda p: step(p), params)
+        tok_s = b * s / (us / 1e6)
+        rows.append(
+            (f"train_step/{name}-reduced", us, f"loss={float(loss):.3f};tok_s={tok_s:.0f}")
+        )
+    return rows
+
+
+def bench_serve():
+    """Batched decode throughput, exact vs CiM-quantized inference."""
+    import dataclasses
+
+    from repro.configs import ARCHS, reduced
+    from repro.core.cim_linear import CiMConfig
+    from repro.launch.serve import ServeSettings, serve_batch
+
+    rows = []
+    base = reduced(ARCHS["smollm-135m"], n_layers=2)
+    for tag, cfg in (
+        ("exact", base),
+        (
+            "cim_fakequant",
+            dataclasses.replace(
+                base, cim=CiMConfig(mode="fake_quant", adc_bits=8, rows=64, ste=False)
+            ),
+        ),
+    ):
+        out = serve_batch(cfg, ServeSettings(batch=4, prompt_len=32, gen_len=16))
+        rows.append(
+            (
+                f"serve/{tag}",
+                out["decode_s"] / 15 * 1e6,
+                f"decode_tok_s={out['decode_tok_s']:.1f};prefill_ms={out['prefill_s'] * 1e3:.0f}",
+            )
+        )
+    return rows
+
+
+def bench_dryrun_summary():
+    """Roofline table from cached dry-run results (one row per cell)."""
+    import json
+    from pathlib import Path
+
+    rows = []
+    d = Path("results/dryrun_v3_opt")
+    if not d.exists():
+        d = Path("results/dryrun")
+    if not d.exists():
+        return [("dryrun/missing", 0.0, "run python -m repro.launch.dryrun --all")]
+    for f in sorted(d.glob("*__singlepod.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            rows.append((f"dryrun/{r['arch']}/{r['shape']}", 0.0, f"FAILED:{r.get('error','')[:40]}"))
+            continue
+        rf = r["roofline"]
+        rows.append(
+            (
+                f"dryrun/{r['arch']}/{r['shape']}",
+                rf["t_compute"] * 1e6,
+                f"bottleneck={rf['bottleneck']};t_c_ms={rf['t_compute']*1e3:.2f};"
+                f"t_m_ms={rf['t_memory']*1e3:.2f};t_x_ms={rf['t_collective']*1e3:.2f};"
+                f"mem_gib={r['memory']['bytes']/2**30:.2f};useful={rf['useful_ratio']:.2f}",
+            )
+        )
+    return rows

@@ -1,0 +1,198 @@
+"""One benchmark per paper table/figure. Each returns CSV rows
+(name, us_per_call, derived)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, n=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6, out
+
+
+def table1_adc_area_energy():
+    """Paper Table I: area/energy of 5-bit conversion, 3 ADC styles."""
+    from repro.core.energy_area import table1
+
+    t = table1()
+    rows = []
+    for style, d in t.items():
+        rows.append(
+            (
+                f"table1/{style}",
+                0.0,
+                f"tech={d['tech']};area_um2={d['area_um2']};energy_pj={d['energy_pj']}",
+            )
+        )
+    a = t["sar"]["area_um2"] / t["in_memory"]["area_um2"]
+    f = t["flash"]["area_um2"] / t["in_memory"]["area_um2"]
+    ea = t["sar"]["energy_pj"] / t["in_memory"]["energy_pj"]
+    ef = t["flash"]["energy_pj"] / t["in_memory"]["energy_pj"]
+    rows.append(
+        (
+            "table1/ratios",
+            0.0,
+            f"area_vs_sar={a:.1f}x(paper~25x);area_vs_flash={f:.1f}x(paper~51x);"
+            f"energy_vs_sar={ea:.2f}x(paper~1.4x);energy_vs_flash={ef:.1f}x(paper~13x)",
+        )
+    )
+    return rows
+
+
+def fig4_asymmetric_search():
+    """Fig. 4: MAV skew + expected comparisons, symmetric vs asymmetric."""
+    from repro.core import search_tree as st
+    from repro.core.adc import ADCConfig, convert
+    from repro.core.mav_stats import analytic_code_pmf, analytic_mav_pmf, entropy_bits
+
+    rows = []
+    pmf_mav = analytic_mav_pmf(16, 0.25)
+    rows.append(
+        (
+            "fig4a/mav_distribution",
+            0.0,
+            f"mode_at={int(np.argmax(pmf_mav))}/16;p_discharge=0.25;"
+            f"entropy_bits={entropy_bits(pmf_mav):.2f}",
+        )
+    )
+    for bits in (3, 4, 5, 6, 7):
+        pmf = analytic_code_pmf(16, bits)
+        opt = st.optimal_tree(pmf)
+        e = opt.expected_depth(pmf)
+        rows.append(
+            (
+                f"fig4c/bits{bits}",
+                0.0,
+                f"sym={bits};asym={e:.2f};saving={100 * (1 - e / bits):.0f}%",
+            )
+        )
+    # measured (monte-carlo) comparison count through the actual converter
+    pmf = analytic_code_pmf(16, 5)
+    tree = st.optimal_tree(pmf)
+    v = jnp.asarray(np.random.default_rng(0).binomial(16, 0.25, 100_000) / 16.0)
+    cfg = ADCConfig(bits=5, mode="sar_asym")
+    us, res = _time(lambda v: convert(v, cfg, tree=tree).comparisons, v)
+    rows.append(
+        (
+            "fig4c/measured_5bit",
+            us,
+            f"avg_comparisons={float(res.mean()):.3f};paper=3.7",
+        )
+    )
+    return rows
+
+
+def fig6_nonlinearity():
+    """Fig. 6: staircase + DNL/INL Monte Carlo under cap mismatch."""
+    from repro.core import adc
+
+    cfg = adc.ADCConfig(bits=5, mode="sar", ref_mismatch_sigma=0.01)
+    worst_dnl, worst_inl = [], []
+    t0 = time.perf_counter()
+    for seed in range(8):
+        r, codes = adc.measure_transfer(cfg, key=jax.random.PRNGKey(seed), n_points=1 << 13)
+        dnl, inl = adc.dnl_inl(r, codes, cfg)
+        worst_dnl.append(np.nanmax(np.abs(dnl)))
+        worst_inl.append(np.nanmax(np.abs(inl)))
+    us = (time.perf_counter() - t0) / 8 * 1e6
+    return [
+        (
+            "fig6/dnl_inl",
+            us,
+            f"max_dnl={max(worst_dnl):.3f}LSB;max_inl={max(worst_inl):.3f}LSB;paper<0.5",
+        )
+    ]
+
+
+def fig7_design_space():
+    """Fig. 7a,b: area & latency vs precision per ADC style."""
+    from repro.core.energy_area import ADC_STYLES, area_um2, energy_pj, latency_cycles
+
+    rows = []
+    for style in ADC_STYLES:
+        for bits in (3, 5, 7):
+            rows.append(
+                (
+                    f"fig7ab/{style}/bits{bits}",
+                    0.0,
+                    f"area_um2={area_um2(style, bits):.1f};"
+                    f"latency_cyc={latency_cycles(style, bits):.2f};"
+                    f"energy_pj={energy_pj(style, bits):.1f}",
+                )
+            )
+    return rows
+
+
+def fig7_mnist(trained=None):
+    """Fig. 7c,d: MNIST accuracy & ADC power vs clock frequency and VDD."""
+    from repro.core.cim_linear import CiMConfig
+    from repro.core.noise import AnalogEnv, power_uw
+    from repro.train.mnist_mlp import evaluate, train_mlp
+
+    if trained is None:
+        params, float_acc = train_mlp(epochs=4)
+    else:
+        params, float_acc = trained
+    cim = CiMConfig(
+        mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16,
+        a_signed=False, ste=False,
+    )
+    rows = [("fig7/float_acc", 0.0, f"acc={float_acc:.3f}")]
+    for f in (10e6, 25e6, 50e6, 75e6, 100e6):
+        env = AnalogEnv(freq_hz=f)
+        t0 = time.perf_counter()
+        acc = evaluate(params, cim, env=env, n_eval=512)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append(
+            (
+                f"fig7c/freq{int(f/1e6)}MHz",
+                us,
+                f"acc={acc:.3f};power_uw={power_uw(env, 5):.2f}",
+            )
+        )
+    for v in (1.0, 0.9, 0.8, 0.7, 0.6):
+        env = AnalogEnv(vdd=v)
+        acc = evaluate(params, cim, env=env, n_eval=512)
+        rows.append(
+            (
+                f"fig7d/vdd{v:.1f}",
+                0.0,
+                f"acc={acc:.3f};power_uw={power_uw(env, 5):.2f}",
+            )
+        )
+    return rows
+
+
+def fig3_hybrid_schedule():
+    """Fig. 3/5c: hybrid Flash+SAR timeline + system throughput."""
+    from repro.core.schedule import hybrid_schedule, pair_sar_schedule, throughput_summary
+
+    s = hybrid_schedule(bits=5, flash_bits=2, n_cim_arrays=3)
+    p = pair_sar_schedule(bits=5, n_conversions=8)
+    t = throughput_summary()
+    return [
+        (
+            "fig3/hybrid_timeline",
+            0.0,
+            f"cycles={s.n_cycles};conversions={s.n_conversions};arrays={s.n_arrays}",
+        ),
+        (
+            "fig2/pair_sar",
+            0.0,
+            f"conv_per_cycle_per_array={p.conversions_per_cycle_per_array:.3f}",
+        ),
+        (
+            "system/area_throughput_gain",
+            0.0,
+            f"conversions_per_area_gain={t['conversions_per_area_gain']:.1f}x",
+        ),
+    ]

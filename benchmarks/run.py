@@ -1,0 +1,53 @@
+"""Benchmark harness: one function per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV. Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only fig4,table1] [--skip-slow]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated bench name filter")
+    ap.add_argument("--skip-slow", action="store_true", help="skip MNIST training bench")
+    args = ap.parse_args()
+
+    from benchmarks import framework, paper_figs
+
+    benches = [
+        ("table1", paper_figs.table1_adc_area_energy),
+        ("fig4", paper_figs.fig4_asymmetric_search),
+        ("fig6", paper_figs.fig6_nonlinearity),
+        ("fig7ab", paper_figs.fig7_design_space),
+        ("fig3", paper_figs.fig3_hybrid_schedule),
+        ("kernels", framework.bench_cim_kernels),
+        ("train", framework.bench_train_step),
+        ("serve", framework.bench_serve),
+        ("dryrun", framework.bench_dryrun_summary),
+    ]
+    if not args.skip_slow:
+        benches.insert(5, ("fig7cd", paper_figs.fig7_mnist))
+
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if only and name not in only:
+            continue
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

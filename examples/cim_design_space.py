@@ -1,0 +1,36 @@
+"""Design-space sweep: ADC style x precision -> area / energy / latency /
+MNIST accuracy — the full Fig. 7 exploration in one table.
+
+  PYTHONPATH=src python examples/cim_design_space.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.core.cim_linear import CiMConfig
+from repro.core.energy_area import area_um2, energy_pj, latency_cycles
+from repro.train.mnist_mlp import evaluate, train_mlp
+
+
+def main():
+    params, float_acc = train_mlp(epochs=5)
+    print(f"float accuracy: {float_acc:.3f}")
+    print(f"{'style':18s} {'bits':>4s} {'area um2':>9s} {'E pJ':>7s} "
+          f"{'lat cyc':>8s} {'accuracy':>8s}")
+    for style in ("in_memory", "in_memory_asym", "in_memory_hybrid"):
+        for bits in (3, 4, 5):
+            cim = CiMConfig(
+                mode="bitplane", a_bits=4, w_bits=4, adc_bits=bits, rows=16,
+                a_signed=False, ste=False,
+                search="sar_asym" if style == "in_memory_asym" else "sar",
+            )
+            acc = evaluate(params, cim, n_eval=512)
+            print(f"{style:18s} {bits:4d} {area_um2(style, bits):9.1f} "
+                  f"{energy_pj(style, bits):7.1f} {latency_cycles(style, bits):8.2f} "
+                  f"{acc:8.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: the paper's pipeline end-to-end on one machine.
+
+Trains the MNIST MLP in float, then evaluates it with every linear routed
+through bit-plane CiM arrays digitized by the memory-immersed ADC — symmetric
+SAR, asymmetric SAR (Fig. 4), and hybrid Flash+SAR — and prints the
+area/energy ledger of Table I for the same operating points.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.core.cim_linear import CiMConfig, digitization_stats
+from repro.core.energy_area import energy_pj, table1
+from repro.core.noise import AnalogEnv
+from repro.train.mnist_mlp import evaluate, train_mlp
+
+
+def main():
+    print("== training float MLP on synthetic MNIST ==")
+    params, float_acc = train_mlp(epochs=5)
+    print(f"float test accuracy: {float_acc:.3f}\n")
+
+    chip = dict(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16,
+                a_signed=False, ste=False)
+    configs = {
+        "ideal (no CiM)": None,
+        "CiM + symmetric SAR (5 cmp)": CiMConfig(search="sar", **chip),
+        "CiM + asymmetric SAR (~3.7 cmp)": CiMConfig(search="sar_asym", **chip),
+    }
+    print("== inference through memory-immersed digitization ==")
+    for name, cim in configs.items():
+        acc = evaluate(params, cim, env=AnalogEnv(freq_hz=10e6, vdd=1.0), n_eval=1024)
+        if cim is not None:
+            d = digitization_stats(cim, 1024, 256, 128)
+            e = energy_pj("in_memory_asym" if cim.search == "sar_asym" else "in_memory", 5)
+            extra = f"  E/conv={e:.1f} pJ, E[cmp]={d['expected_comparisons_per_conversion']:.2f}"
+        else:
+            extra = ""
+        print(f"  {name:34s} acc={acc:.3f}{extra}")
+
+    print("\n== Table I (measured-anchor area/energy model) ==")
+    for style, d in table1().items():
+        print(f"  {style:10s} {d['tech']:>5s}  {d['area_um2']:>9.1f} um^2  {d['energy_pj']:>7.2f} pJ")
+
+
+if __name__ == "__main__":
+    main()

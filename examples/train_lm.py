@@ -1,0 +1,52 @@
+"""End-to-end LM training driver (CPU-scale): a ~20M-param smollm-family
+model for a few hundred steps with checkpoints, watchdog, and restart.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--tiny]
+"""
+
+import argparse
+import dataclasses
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.configs import ARCHS, reduced
+from repro.ft.watchdog import run_with_restart
+from repro.launch.train import TrainSettings, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--tiny", action="store_true", help="2-layer d=64 config")
+    ap.add_argument("--ckpt-dir", default="results/example_ckpt")
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = reduced(ARCHS["smollm-135m"])
+    else:  # ~20M params: same family, scaled to CPU budget
+        cfg = reduced(
+            ARCHS["smollm-135m"],
+            n_layers=6, d_model=256, d_ff=768, vocab=8192,
+            n_heads=4, n_kv_heads=2, head_dim=64,
+        )
+    n = cfg.n_params()
+    print(f"training {cfg.name}-example ({n/1e6:.1f}M params) for {args.steps} steps")
+
+    st = TrainSettings(
+        steps=args.steps, batch=8, seq=256, lr=1e-3, warmup=20,
+        ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10,
+    )
+
+    def run(resume):
+        out = train(cfg, st, resume=resume)
+        print(f"loss: {out['first_loss']:.3f} -> {out['final_loss']:.3f} "
+              f"({out['wall_s']:.0f}s, {st.batch * st.seq * args.steps / out['wall_s']:.0f} tok/s)")
+        return st.steps
+
+    run_with_restart(run, max_restarts=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: Memory-Immersed Collaborative Digitization for CiM deep learning,
+as a production-grade multi-pod JAX framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Atomic, async, elastic checkpointing."""
+
+from repro.checkpoint.ckpt import Checkpointer, latest_step, restore, save
+
+__all__ = ["Checkpointer", "latest_step", "restore", "save"]

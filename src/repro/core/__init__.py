@@ -1,0 +1,18 @@
+"""Core library: memory-immersed collaborative digitization for CiM inference."""
+
+from repro.core.adc import ADCConfig, ADCResult, convert, dequantize, quantize_ideal
+from repro.core.cim_linear import CiMConfig, cim_matmul
+from repro.core.search_tree import optimal_tree, symmetric_tree, weight_balanced_tree
+
+__all__ = [
+    "ADCConfig",
+    "ADCResult",
+    "convert",
+    "dequantize",
+    "quantize_ideal",
+    "CiMConfig",
+    "cim_matmul",
+    "optimal_tree",
+    "symmetric_tree",
+    "weight_balanced_tree",
+]

@@ -1,0 +1,91 @@
+"""Behavioral model of an 8T bit-plane compute-in-SRAM array (paper Fig. 2).
+
+The array stores 1-bit weight planes down ``rows`` word lines. One 1-bit input
+plane is applied per cycle on the input lines (IL); a column line (CL)
+discharges only where stored bit AND input bit are both '1'; merging CLs on
+the sum lines (SL) charge-averages the column results into the analog
+multiply-average voltage ``V_MAV = VDD * (1/R) * sum_r x_r * w_rc``.
+
+Signed multibit operands use two's-complement bit planes recombined digitally
+with signed powers of two (the MSB plane carries weight ``-2^(n-1)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "bit_planes",
+    "plane_weights",
+    "from_bit_planes",
+    "CiMArrayModel",
+]
+
+
+def bit_planes(x_int: jnp.ndarray, bits: int, signed: bool) -> jnp.ndarray:
+    """Decompose integers into bit planes, LSB first: output (bits, *x.shape).
+
+    Signed inputs are interpreted in two's complement over ``bits`` bits; the
+    recombination weights come from :func:`plane_weights`.
+    """
+    x = x_int.astype(jnp.int32)
+    if signed:
+        x = jnp.where(x < 0, x + (1 << bits), x)  # two's complement pattern
+    shifts = jnp.arange(bits, dtype=jnp.int32).reshape((bits,) + (1,) * x.ndim)
+    return ((x[None] >> shifts) & 1).astype(jnp.int32)
+
+
+def plane_weights(bits: int, signed: bool) -> np.ndarray:
+    """Digital recombination weight of each plane (LSB first)."""
+    w = 2.0 ** np.arange(bits)
+    if signed:
+        w[-1] = -w[-1]
+    return w
+
+
+def from_bit_planes(planes: jnp.ndarray, bits: int, signed: bool) -> jnp.ndarray:
+    """Inverse of :func:`bit_planes` (for tests)."""
+    w = jnp.asarray(plane_weights(bits, signed)).reshape(
+        (bits,) + (1,) * (planes.ndim - 1)
+    )
+    return (planes * w).sum(axis=0).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class CiMArrayModel:
+    """One physical CiM array: geometry + analog non-idealities.
+
+    ``mav_sigma`` is the *residual* relative error of the analog MAV after the
+    common-mode cancellation the paper gets from using an identical neighbor
+    array for reference generation (§II-A) — small by construction.
+    """
+
+    rows: int = 16
+    cols: int = 32
+    vdd: float = 1.0
+    mav_sigma: float = 0.0
+
+    def compute_mav(
+        self,
+        x_bits: jnp.ndarray,  # (..., rows) int {0,1} — one input plane
+        w_bits: jnp.ndarray,  # (rows, cols) int {0,1} — one stored weight plane
+        key: Optional[jax.Array] = None,
+    ) -> jnp.ndarray:
+        """Analog MAV voltages (..., cols) in [0, VDD]."""
+        if x_bits.shape[-1] != self.rows or w_bits.shape != (self.rows, self.cols):
+            raise ValueError(
+                f"shape mismatch: x{x_bits.shape} w{w_bits.shape} "
+                f"array {self.rows}x{self.cols}"
+            )
+        mav = x_bits.astype(jnp.float32) @ w_bits.astype(jnp.float32) / self.rows
+        v = mav * self.vdd
+        if self.mav_sigma > 0.0:
+            if key is None:
+                raise ValueError("mav noise requires a PRNG key")
+            v = v + self.mav_sigma * self.vdd * jax.random.normal(key, v.shape)
+        return v

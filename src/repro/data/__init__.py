@@ -1,0 +1,6 @@
+"""Data pipelines: deterministic synthetic LM tokens + procedural MNIST."""
+
+from repro.data.mnist_synth import load_mnist_synth
+from repro.data.tokens import TokenPipeline
+
+__all__ = ["TokenPipeline", "load_mnist_synth"]

@@ -1,0 +1,5 @@
+"""Fault tolerance: watchdog, straggler detection, supervised restart."""
+
+from repro.ft.watchdog import Watchdog, run_with_restart
+
+__all__ = ["Watchdog", "run_with_restart"]

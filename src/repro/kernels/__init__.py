@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (interpret=True validated on CPU) + jnp oracles."""
+
+from repro.kernels.ops import adc_quant_op, cim_matmul_op
+
+__all__ = ["adc_quant_op", "cim_matmul_op"]

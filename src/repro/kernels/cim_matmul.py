@@ -1,0 +1,204 @@
+"""Fused CiM matmul Pallas TPU kernel.
+
+TPU-native adaptation of the paper's memory-immersed digitization: the
+reduction dimension is tiled into ``rows``-sized "CiM arrays"; each row-tile's
+partial product-sum (the MAV) is digitized *inside the kernel* — in VMEM,
+next to the compute, exactly as the paper's digitizer lives inside the memory
+fabric — before digital recombination into the output accumulator.
+
+Two modes (static):
+  * ``fake_quant`` — per-row-tile partial sums quantized with the
+    RMS-equivalent composite step (1 MXU matmul per row-tile).
+  * ``bitplane``   — faithful A×W bit-plane decomposition in-register, one MXU
+    matmul per plane pair per row-tile, ideal B-bit ADC per MAV.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; the output block accumulates across K
+steps. Block shapes default to MXU-aligned 128 multiples; ``bk`` must be a
+multiple of ``rows``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cim_matmul_pallas", "adc_quant_pallas"]
+
+
+def _quantize_tile(partial: jnp.ndarray, step: float) -> jnp.ndarray:
+    # round-half-away-from-zero to match jnp.round on .5 boundaries is not
+    # needed: jnp.round is round-half-even in both kernel and oracle.
+    return jnp.round(partial / step) * step
+
+
+def _cim_matmul_kernel_fakequant(x_ref, w_ref, o_ref, *, rows, step, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bm = x_ref.shape[0]
+    bk = x_ref.shape[1]
+    bn = w_ref.shape[1]
+    acc = jnp.zeros((bm, bn), jnp.float32)
+    for t in range(bk // rows):  # static unroll over row-tiles ("CiM arrays")
+        xs = x_ref[:, t * rows : (t + 1) * rows]
+        ws = w_ref[t * rows : (t + 1) * rows, :]
+        partial = jnp.dot(xs, ws, preferred_element_type=jnp.float32)
+        acc = acc + _quantize_tile(partial, step)
+    o_ref[...] += acc
+
+
+def _cim_matmul_kernel_bitplane(
+    x_ref, w_ref, o_ref, *, rows, adc_bits, a_bits, w_bits, a_signed, w_signed, n_k
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bm = x_ref.shape[0]
+    bk = x_ref.shape[1]
+    bn = w_ref.shape[1]
+    n_codes = 1 << adc_bits
+
+    xi = x_ref[...]
+    wi = w_ref[...]
+    if a_signed:
+        xi = jnp.where(xi < 0, xi + (1 << a_bits), xi)
+    if w_signed:
+        wi = jnp.where(wi < 0, wi + (1 << w_bits), wi)
+
+    acc = jnp.zeros((bm, bn), jnp.float32)
+    for t in range(bk // rows):
+        xs = xi[:, t * rows : (t + 1) * rows]
+        ws = wi[t * rows : (t + 1) * rows, :]
+        for a in range(a_bits):
+            sa = -(1 << a) if (a_signed and a == a_bits - 1) else (1 << a)
+            xp = ((xs >> a) & 1).astype(jnp.float32)
+            for b in range(w_bits):
+                sb = -(1 << b) if (w_signed and b == w_bits - 1) else (1 << b)
+                wp = ((ws >> b) & 1).astype(jnp.float32)
+                mav = jnp.dot(xp, wp, preferred_element_type=jnp.float32) / rows
+                codes = jnp.clip(jnp.floor(mav * n_codes), 0, n_codes - 1)
+                counts = codes / n_codes * rows  # floor reconstruction
+                acc = acc + float(sa * sb) * counts
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "rows",
+        "adc_bits",
+        "mode",
+        "a_bits",
+        "w_bits",
+        "a_signed",
+        "w_signed",
+        "block_m",
+        "block_n",
+        "block_k",
+        "interpret",
+    ),
+)
+def cim_matmul_pallas(
+    x_int: jnp.ndarray,  # (M, K) float32 int-valued (fake_quant) / int32 (bitplane)
+    w_int: jnp.ndarray,  # (K, N) same dtype
+    *,
+    rows: int = 128,
+    adc_bits: int = 8,
+    mode: str = "fake_quant",
+    a_bits: int = 8,
+    w_bits: int = 8,
+    a_signed: bool = True,
+    w_signed: bool = True,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused CiM matmul. M, N, K must be multiples of the block shapes
+    (``ops.py`` pads); ``block_k`` must be a multiple of ``rows``."""
+    m, k = x_int.shape
+    n = w_int.shape[1]
+    if block_k % rows:
+        raise ValueError("block_k must be a multiple of rows")
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError("unpadded shapes; use repro.kernels.ops wrappers")
+    n_k = k // block_k
+
+    if mode == "fake_quant":
+        from repro.kernels.ref import fake_quant_step
+
+        step = fake_quant_step(rows, adc_bits, a_bits, w_bits, a_signed, w_signed)
+        kernel = functools.partial(
+            _cim_matmul_kernel_fakequant, rows=rows, step=step, n_k=n_k
+        )
+    elif mode == "bitplane":
+        kernel = functools.partial(
+            _cim_matmul_kernel_bitplane,
+            rows=rows,
+            adc_bits=adc_bits,
+            a_bits=a_bits,
+            w_bits=w_bits,
+            a_signed=a_signed,
+            w_signed=w_signed,
+            n_k=n_k,
+        )
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x_int, w_int)
+
+
+# ---------------------------------------------------------------------------
+# Standalone tiled ADC quantization kernel
+# ---------------------------------------------------------------------------
+
+
+def _adc_quant_kernel(v_ref, o_ref, *, bits, vdd):
+    n = 1 << bits
+    v = v_ref[...]
+    codes = jnp.clip(jnp.floor(v / vdd * n), 0, n - 1)
+    o_ref[...] = (codes + 0.5) * (vdd / n)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "vdd", "block_m", "block_n", "interpret")
+)
+def adc_quant_pallas(
+    v: jnp.ndarray,  # (M, N) float32 analog values
+    *,
+    bits: int = 5,
+    vdd: float = 1.0,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m, n = v.shape
+    if m % block_m or n % block_n:
+        raise ValueError("unpadded shapes; use repro.kernels.ops wrappers")
+    return pl.pallas_call(
+        functools.partial(_adc_quant_kernel, bits=bits, vdd=vdd),
+        grid=(m // block_m, n // block_n),
+        in_specs=[pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(v)

@@ -1,0 +1,123 @@
+"""Public jit'd wrappers for the Pallas kernels: padding, quantization,
+scale handling, and CPU interpret-mode fallback.
+
+``cim_matmul_op(x, w, ...)`` is the drop-in accelerated counterpart of
+``core.cim_linear.cim_matmul`` with an ideal (noiseless) ADC.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim_linear import quantize_symmetric
+from repro.kernels.cim_matmul import adc_quant_pallas, cim_matmul_pallas
+
+__all__ = ["cim_matmul_op", "adc_quant_op"]
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mults: tuple[int, ...]) -> jnp.ndarray:
+    pads = [(0, (-s) % m) for s, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "rows",
+        "adc_bits",
+        "mode",
+        "a_bits",
+        "w_bits",
+        "a_signed",
+        "w_signed",
+        "block_m",
+        "block_n",
+        "block_k",
+        "interpret",
+    ),
+)
+def cim_matmul_op(
+    x: jnp.ndarray,  # (..., K) float
+    w: jnp.ndarray,  # (K, N) float
+    *,
+    rows: int = 128,
+    adc_bits: int = 8,
+    mode: str = "fake_quant",
+    a_bits: int = 8,
+    w_bits: int = 8,
+    a_signed: bool = True,
+    w_signed: bool = True,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """CiM-quantized ``x @ w`` on the fused Pallas kernel."""
+    if interpret is None:
+        interpret = _default_interpret()
+    if block_k is None:
+        block_k = max(rows, 512 - 512 % rows) if rows <= 512 else rows
+
+    batch_shape = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[1]
+    xm = x.reshape(-1, k)
+    m = xm.shape[0]
+
+    x_int, sx = quantize_symmetric(xm, a_bits, a_signed)
+    w_int, sw = quantize_symmetric(w, w_bits, w_signed, per_axis=-1)
+
+    dt = jnp.int32 if mode == "bitplane" else jnp.float32
+    xp = _pad_to(x_int.astype(dt), (block_m, block_k))
+    wp = _pad_to(w_int.astype(dt), (block_k, block_n))
+
+    y = cim_matmul_pallas(
+        xp,
+        wp,
+        rows=rows,
+        adc_bits=adc_bits,
+        mode=mode,
+        a_bits=a_bits,
+        w_bits=w_bits,
+        a_signed=a_signed,
+        w_signed=w_signed,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        interpret=interpret,
+    )[:m, :n]
+    y = y * sx * sw
+    return y.reshape(*batch_shape, n)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "vdd", "block_m", "block_n", "interpret")
+)
+def adc_quant_op(
+    v: jnp.ndarray,
+    *,
+    bits: int = 5,
+    vdd: float = 1.0,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Tiled ideal-ADC quantize+reconstruct of a 2D analog-value array."""
+    if interpret is None:
+        interpret = _default_interpret()
+    m, n = v.shape
+    bm, bn = min(block_m, max(m, 8)), min(block_n, max(n, 128))
+    vp = _pad_to(v, (bm, bn))
+    out = adc_quant_pallas(
+        vp, bits=bits, vdd=vdd, block_m=bm, block_n=bn, interpret=interpret
+    )
+    return out[:m, :n]

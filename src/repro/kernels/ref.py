@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact contracts).
+
+The kernels operate on *pre-quantized integer-valued* tensors (quantization
+scales are applied by the ``ops.py`` wrappers), so the oracle contracts are
+exact integer/fixed-point math with no RNG:
+
+  * ``adc_quant_ref``   — ideal B-bit staircase over a voltage tile.
+  * ``cim_matmul_ref``  — tiled CiM matmul, ``fake_quant`` or ``bitplane``
+                          semantics, matching ``core.cim_linear`` with an
+                          ideal (noiseless) ADC.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cim_array import plane_weights
+
+__all__ = ["adc_quant_ref", "cim_matmul_ref", "fake_quant_step", "flash_attention_ref"]
+
+
+def adc_quant_ref(v: jnp.ndarray, bits: int, vdd: float = 1.0) -> jnp.ndarray:
+    """Ideal mid-tread ADC + mid-point reconstruction: v -> v_hat."""
+    n = 1 << bits
+    codes = jnp.clip(jnp.floor(v / vdd * n), 0, n - 1)
+    return (codes + 0.5) * (vdd / n)
+
+
+def fake_quant_step(
+    rows: int, adc_bits: int, a_bits: int, w_bits: int, a_signed: bool, w_signed: bool
+) -> float:
+    """RMS-equivalent composite quantizer step (see core.cim_linear)."""
+    wa = plane_weights(a_bits, a_signed)
+    ww = plane_weights(w_bits, w_signed)
+    rms = float(np.sqrt((wa**2).sum()) * np.sqrt((ww**2).sum()))
+    return (rows / (1 << adc_bits)) * rms
+
+
+def cim_matmul_ref(
+    x_int: jnp.ndarray,  # (M, K) float32, integer-valued
+    w_int: jnp.ndarray,  # (K, N) float32, integer-valued
+    *,
+    rows: int = 128,
+    adc_bits: int = 8,
+    mode: str = "fake_quant",
+    a_bits: int = 8,
+    w_bits: int = 8,
+    a_signed: bool = True,
+    w_signed: bool = True,
+    exact_counts: bool = False,
+) -> jnp.ndarray:
+    """Oracle for the fused CiM matmul kernel. K must divide by ``rows``."""
+    m, k = x_int.shape
+    n = w_int.shape[1]
+    assert k % rows == 0, "wrapper pads K to a multiple of rows"
+    t = k // rows
+
+    if mode == "fake_quant":
+        xt = x_int.reshape(m, t, rows)
+        wt = w_int.reshape(t, rows, n)
+        partial = jnp.einsum("mtr,trn->mtn", xt, wt)
+        step = fake_quant_step(rows, adc_bits, a_bits, w_bits, a_signed, w_signed)
+        return (jnp.round(partial / step) * step).sum(axis=1)
+
+    if mode == "bitplane":
+        n_codes = 1 << adc_bits
+        wa = plane_weights(a_bits, a_signed)
+        ww = plane_weights(w_bits, w_signed)
+        xi = x_int.astype(jnp.int32)
+        wi = w_int.astype(jnp.int32)
+        if a_signed:
+            xi = jnp.where(xi < 0, xi + (1 << a_bits), xi)
+        if w_signed:
+            wi = jnp.where(wi < 0, wi + (1 << w_bits), wi)
+        y = jnp.zeros((m, n), jnp.float32)
+        for a in range(a_bits):
+            xp = ((xi >> a) & 1).astype(jnp.float32).reshape(m, t, rows)
+            for b in range(w_bits):
+                wp = ((wi >> b) & 1).astype(jnp.float32).reshape(t, rows, n)
+                mav = jnp.einsum("mtr,trn->mtn", xp, wp) / rows
+                codes = jnp.clip(jnp.floor(mav * n_codes), 0, n_codes - 1)
+                counts = codes / n_codes * rows  # floor reconstruction
+                if exact_counts:
+                    counts = jnp.round(counts)
+                y = y + float(wa[a] * ww[b]) * counts.sum(axis=1)
+        return y
+
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def flash_attention_ref(q, k, v, *, causal=True, sm_scale=None):
+    """Plain softmax attention oracle (GQA): q (B,H,Sq,hd), k/v (B,KV,Sk,hd)."""
+    b, h, sq, hd = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    if sm_scale is None:
+        sm_scale = hd ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, kv, g, sq, hd) * sm_scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qf, kf)
+    if causal:
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bkcd->bkgqd", p, vf)
+    return o.reshape(b, h, sq, hd).astype(q.dtype)

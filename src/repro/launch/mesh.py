@@ -1,0 +1,21 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = (data, model) = 256 chips.
+    Multi-pod: (2, 16, 16) = (pod, data, model) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Degenerate 1x1 mesh over the local device (smoke tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,232 @@
+"""Divisibility-aware sharding rules: param tree -> NamedSharding tree.
+
+Logical axes:
+  * ``tp``   -> mesh axis ("model",)            tensor parallelism
+  * ``fsdp`` -> ("data",) or ("pod", "data")    parameter/optimizer sharding
+  * ``dp``   -> ("data",) or ("pod", "data")    batch sharding
+
+A dim that does not divide its assigned mesh axes falls back to replication
+for that dim (e.g. kv_heads=8 on a 16-way model axis) — every fallback is
+recorded so the dry-run report shows exactly what got replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "logical_to_mesh",
+    "spec_for",
+    "sharding_for",
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "FALLBACKS",
+]
+
+FALLBACKS: list[str] = []  # (cleared per dry-run cell) replication fallbacks
+
+
+def logical_to_mesh(mesh: Mesh) -> dict[str, tuple[str, ...]]:
+    multi = "pod" in mesh.axis_names
+    dp = ("pod", "data") if multi else ("data",)
+    return {"tp": ("model",), "fsdp": dp, "dp": dp}
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def spec_for(
+    mesh: Mesh,
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    label: str = "",
+) -> P:
+    """Build a PartitionSpec; drop (replicate) any dim that doesn't divide."""
+    l2m = logical_to_mesh(mesh)
+    entries = []
+    for i, (dim, ax) in enumerate(zip(shape, logical)):
+        if ax is None:
+            entries.append(None)
+            continue
+        mesh_axes = l2m[ax]
+        if dim % _axes_size(mesh, mesh_axes) == 0:
+            entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        else:
+            entries.append(None)
+            FALLBACKS.append(
+                f"{label}: dim {i} ({dim}) not divisible by {ax}{mesh_axes} -> replicated"
+            )
+    return P(*entries)
+
+
+def sharding_for(mesh, shape, logical, label="") -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, shape, logical, label))
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules (matched by leaf path suffix)
+# ---------------------------------------------------------------------------
+
+# name -> logical axes per trailing dim (leading stacked-L dims get None)
+_PARAM_RULES: dict[str, tuple] = {
+    # embeddings
+    "tok": ("tp", "fsdp"),
+    "unembed": ("fsdp", "tp"),
+    # attention (flattened head dims shard over tp when divisible)
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",),
+    "bk": ("tp",),
+    "bv": ("tp",),
+    # dense mlp
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # moe (expert dim over tp = expert parallelism)
+    "router": ("fsdp", None),
+    "moe/w_gate": ("tp", "fsdp", None),
+    "moe/w_up": ("tp", "fsdp", None),
+    "moe/w_down": ("tp", None, "fsdp"),
+    # mamba2 (head-aligned dims over tp; guarded by head divisibility)
+    "in_z": ("fsdp", "tp"),
+    "in_x": ("fsdp", "tp"),
+    "in_b": ("fsdp", None),
+    "in_c": ("fsdp", None),
+    "in_dt": ("fsdp", "tp"),
+    "conv_x": (None, "tp"),
+    "conv_b": (None, None),
+    "conv_c": (None, None),
+    "conv_x_bias": ("tp",),
+    "conv_b_bias": (None,),
+    "conv_c_bias": (None,),
+    "A_log": ("tp",),
+    "D": ("tp",),
+    "dt_bias": ("tp",),
+    "norm": ("tp",),
+    "out_proj": ("tp", "fsdp"),
+    # norms
+    "ln": (None,),
+    "ln1": (None,),
+    "ln2": (None,),
+    "ln_f": (None,),
+    "mamba_ln": (None,),
+}
+
+
+def _rule_for(path: tuple[str, ...]) -> Optional[tuple]:
+    joined = "/".join(path)
+    # longest-suffix match, with moe/* taking precedence over plain names
+    best = None
+    for key, rule in _PARAM_RULES.items():
+        if joined.endswith(key):
+            if best is None or len(key) > len(best[0]):
+                best = (key, rule)
+    return best[1] if best else None
+
+
+def _mamba_heads_shardable(cfg, mesh) -> bool:
+    tp = _axes_size(mesh, ("model",))
+    return cfg.ssm_state and cfg.ssm_heads % tp == 0
+
+
+def param_shardings(mesh: Mesh, params_shape: Any, cfg) -> Any:
+    """Map a params eval_shape tree to NamedShardings."""
+    mamba_tp = _mamba_heads_shardable(cfg, mesh)
+    mamba_names = {
+        "in_z", "in_x", "in_dt", "conv_x", "conv_x_bias",
+        "A_log", "D", "dt_bias", "norm", "out_proj",
+    }
+
+    def one(path, leaf):
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path
+        )
+        rule = _rule_for(keys)
+        shape = leaf.shape
+        if rule is None:
+            return NamedSharding(mesh, P())
+        # mamba leaves fall back to fsdp-only sharding when heads don't divide
+        last = keys[-1]
+        if last in mamba_names and "mamba" in "/".join(keys) and not mamba_tp:
+            rule = tuple("fsdp" if ax == "fsdp" else None for ax in rule)
+        n_lead = len(shape) - len(rule)
+        logical = (None,) * n_lead + rule
+        return sharding_for(mesh, shape, logical, label="/".join(keys))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Activations / inputs / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(mesh: Mesh, batch_shape: Any) -> Any:
+    """Token/label/embedding batches: batch dim over dp, rest replicated."""
+
+    def one(leaf):
+        logical = ("dp",) + (None,) * (len(leaf.shape) - 1)
+        return sharding_for(mesh, leaf.shape, logical, label="batch")
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, cache_shape: Any, cfg) -> Any:
+    """KV / SSM cache shardings for serve steps.
+
+    KV cache leaves are (L, B, S, KV, hd): batch over dp when divisible;
+    kv-heads over tp when divisible, OTHERWISE the sequence dim goes over tp
+    (flash-decoding-style sequence parallelism — the partial-softmax reduce
+    becomes an SPMD collective). Mamba state (L, B, H, P, N): heads over tp.
+    """
+    l2m = logical_to_mesh(mesh)
+    dp_size = _axes_size(mesh, l2m["dp"])
+    tp_size = _axes_size(mesh, l2m["tp"])
+
+    def one(path, leaf):
+        keys = "/".join(p.key if hasattr(p, "key") else str(p) for p in path)
+        shape = leaf.shape
+        nd = len(shape)
+        if keys.endswith("pos"):
+            return NamedSharding(mesh, P())
+        if "conv" in keys:  # (L, B, W-1, C)
+            logical = (None, "dp" if shape[1] % dp_size == 0 else None, None, None)
+            return sharding_for(mesh, shape, logical, label=keys)
+        if keys.endswith("ssm"):  # (L, B, H, P, N)
+            logical = (
+                None,
+                "dp" if shape[1] % dp_size == 0 else None,
+                "tp" if shape[2] % tp_size == 0 else None,
+                None,
+                None,
+            )
+            return sharding_for(mesh, shape, logical, label=keys)
+        if nd == 5:  # attn k/v (L, B, S, KV, hd)
+            b_ok = shape[1] % dp_size == 0
+            kv_ok = shape[3] % tp_size == 0
+            logical = (
+                None,
+                "dp" if b_ok else None,
+                None if kv_ok else "tp",
+                "tp" if kv_ok else None,
+                None,
+            )
+            if not b_ok and shape[2] % dp_size == 0 and kv_ok:
+                # batch=1 long-context: spread the sequence over dp instead
+                logical = (None, None, "dp", "tp", None)
+            return sharding_for(mesh, shape, logical, label=keys)
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,177 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch × shape) cell.
+
+``input_specs`` allocates nothing — weak-type-correct ShapeDtypeStructs only;
+the dry-run lowers against them. The same builders power the real train/serve
+drivers (launch/train.py, launch/serve.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.registry import for_shape, get_config
+from repro.configs.shapes import SHAPES
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.optim.adamw import AdamWState
+from repro.optim.adafactor import AdafactorState
+from repro.optim.schedules import warmup_cosine
+from repro.launch import shardings as sh
+
+__all__ = ["input_specs", "build_cell", "Cell"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model-input stand-ins for one cell (no device allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.input_kind == "embeddings":  # modality-frontend stub
+            inputs = _sds((b, s, cfg.d_model), cfg.compute_dtype)
+        else:
+            inputs = _sds((b, s), "int32")
+        return {"inputs": inputs, "labels": _sds((b, s), "int32")}
+    if shape.kind == "prefill":
+        if cfg.input_kind == "embeddings":
+            return {"inputs": _sds((b, s, cfg.d_model), cfg.compute_dtype)}
+        return {"inputs": _sds((b, s), "int32")}
+    # decode: one new token against a cache of seq_len
+    if cfg.input_kind == "embeddings":
+        token = _sds((b, cfg.d_model), cfg.compute_dtype)
+    else:
+        token = _sds((b,), "int32")
+    return {"token": token, "pos": _sds((), "int32")}
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    fn: Any  # jittable step function
+    args: tuple  # ShapeDtypeStruct pytree args
+    in_shardings: tuple
+    donate: tuple
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    lr: float = 3e-4,
+    cfg_override: ModelConfig | None = None,
+) -> Cell:
+    """Construct (step_fn, arg specs, shardings) for one dry-run cell."""
+    shape = SHAPES[shape_name]
+    cfg = cfg_override or for_shape(get_config(arch), shape)
+    model = build_model(cfg)
+    sh.FALLBACKS.clear()
+
+    # activation sharding constraints, read by the model code at trace time
+    from repro.models import layers as Lmod
+
+    l2m = sh.logical_to_mesh(mesh)
+    import numpy as np
+
+    rules = {
+        k: (axes, int(np.prod([mesh.shape[a] for a in axes])))
+        for k, axes in (("dp", l2m["dp"]), ("tp", l2m["tp"]))
+    }
+    rules["mesh"] = mesh
+    Lmod.set_act_rules(rules)
+
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_sh = sh.param_shardings(mesh, params_sds, cfg)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_init, opt_update = make_optimizer(cfg.optimizer)
+        opt_sds = jax.eval_shape(opt_init, params_sds)
+        rep = NamedSharding(mesh, P())
+        if cfg.optimizer == "adamw":
+            opt_sh = AdamWState(m=params_sh, v=params_sh, count=rep)
+        else:
+
+            def vr_sh(p_shd, p_sds):
+                if len(p_sds.shape) < 2:
+                    return rep
+                spec = tuple(p_shd.spec)
+                spec = spec + (None,) * (len(p_sds.shape) - len(spec))
+                return NamedSharding(mesh, P(*spec[:-1]))
+
+            def vc_sh(p_shd, p_sds):
+                if len(p_sds.shape) < 2:
+                    return rep
+                spec = list(tuple(p_shd.spec) + (None,) * (len(p_sds.shape) - len(tuple(p_shd.spec))))
+                del spec[-2]
+                return NamedSharding(mesh, P(*spec))
+
+            opt_sh = AdafactorState(
+                v_row=jax.tree.map(vr_sh, params_sh, params_sds),
+                v_col=jax.tree.map(vc_sh, params_sh, params_sds),
+                v_full=jax.tree.map(lambda p_shd, p_sds: rep if len(p_sds.shape) >= 2 else p_shd, params_sh, params_sds),
+                count=rep,
+            )
+        batch_sh = sh.batch_shardings(mesh, specs)
+        step_sh = NamedSharding(mesh, P())
+
+        def train_step(params, opt_state, batch, step):
+            def loss_of(p):
+                loss, mets = model.loss_fn(p, batch)
+                return loss, mets
+
+            (loss, mets), grads = jax.value_and_grad(loss_of, has_aux=True)(params)
+            lr_t = warmup_cosine(step, lr, warmup=2000, total=100_000)
+            new_params, new_opt, opt_mets = opt_update(grads, opt_state, params, lr_t)
+            metrics = {"loss": loss, **mets, **opt_mets, "lr": lr_t}
+            return new_params, new_opt, metrics
+
+        args = (params_sds, opt_sds, specs, _sds((), "int32"))
+        in_sh = (params_sh, opt_sh, batch_sh, step_sh)
+        return Cell(arch, shape_name, cfg, train_step, args, in_sh, donate=(0, 1))
+
+    if shape.kind == "prefill":
+        cache_sds = jax.eval_shape(
+            functools.partial(model.make_cache, shape.global_batch, shape.seq_len)
+        )
+        cache_sh = sh.cache_shardings(mesh, cache_sds, cfg)
+        batch_sh = sh.batch_shardings(mesh, specs)
+
+        def prefill_step(params, inputs, cache):
+            return model.prefill(params, inputs, cache)
+
+        args = (params_sds, specs["inputs"], cache_sds)
+        in_sh = (params_sh, batch_sh["inputs"], cache_sh)
+        return Cell(arch, shape_name, cfg, prefill_step, args, in_sh, donate=(2,))
+
+    # decode
+    cache_sds = jax.eval_shape(
+        functools.partial(model.make_cache, shape.global_batch, shape.seq_len)
+    )
+    cache_sh = sh.cache_shardings(mesh, cache_sds, cfg)
+    tok_sds = specs["token"]
+    dp = sh.logical_to_mesh(mesh)["dp"]
+    import numpy as np
+
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    tok_logical = ("dp",) + (None,) * (len(tok_sds.shape) - 1)
+    if tok_sds.shape and tok_sds.shape[0] % dp_size == 0:
+        tok_sh = sh.sharding_for(mesh, tok_sds.shape, tok_logical, "token")
+    else:
+        tok_sh = NamedSharding(mesh, P())
+
+    def decode_step(params, token, pos, cache):
+        return model.decode_step(params, token, pos, cache)
+
+    args = (params_sds, tok_sds, specs["pos"], cache_sds)
+    in_sh = (params_sh, tok_sh, NamedSharding(mesh, P()), cache_sh)
+    return Cell(arch, shape_name, cfg, decode_step, args, in_sh, donate=(3,))

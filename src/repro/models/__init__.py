@@ -1,0 +1,5 @@
+"""Model zoo: dense/GQA/MoE transformer, Mamba2 (SSD), Zamba2 hybrid."""
+
+from repro.models.model import Model, build_model
+
+__all__ = ["Model", "build_model"]

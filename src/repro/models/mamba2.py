@@ -1,0 +1,246 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked + single-step decode.
+
+The chunked SSD form (arXiv:2405.21060) is TPU/MXU-friendly: the sequence is
+split into chunks; the intra-chunk term is a masked matmul ("attention-like"),
+and the inter-chunk term is a short ``lax.scan`` over chunk states — no
+per-token recurrence. Decode uses the O(1) state recurrence.
+
+Projection components are stored as SEPARATE leaves (z/x/B/C/dt and per-stream
+conv kernels) so tensor parallelism can shard the head-aligned dims cleanly
+(heads over the model axis when divisible; see launch/shardings.py). This is
+the TP layout real Mamba2 deployments use.
+
+Parameter layout per stacked layer dim L (G=1 SSM group):
+  in_z, in_x   (L, D, d_inner)
+  in_b, in_c   (L, D, N)
+  in_dt        (L, D, H)
+  conv_{x,b,c} (L, W, d_inner | N | N) + conv_{x,b,c}_bias
+  A_log, D, dt_bias (L, H)
+  norm (L, d_inner);  out_proj (L, d_inner, D)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import axis_size, cdtype, constrain, dense, pdtype, rms_norm
+
+__all__ = ["init_mamba", "mamba_forward", "mamba_decode_step", "make_mamba_state"]
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    return di, h, n
+
+
+def init_mamba(key, cfg: ModelConfig, n_layers: int):
+    d = cfg.d_model
+    di, h, n = _dims(cfg)
+    w = cfg.ssm_conv_width
+    ks = jax.random.split(key, 10)
+    dt = pdtype(cfg)
+    u = jax.random.uniform(ks[0], (n_layers, h), minval=1e-3, maxval=1e-1)
+    nrm = lambda k, shape, fan: jax.random.normal(k, shape, dt) / np.sqrt(fan)
+    return {
+        "in_z": nrm(ks[1], (n_layers, d, di), d),
+        "in_x": nrm(ks[2], (n_layers, d, di), d),
+        "in_b": nrm(ks[3], (n_layers, d, n), d),
+        "in_c": nrm(ks[4], (n_layers, d, n), d),
+        "in_dt": nrm(ks[5], (n_layers, d, h), d),
+        "conv_x": nrm(ks[6], (n_layers, w, di), w),
+        "conv_b": nrm(ks[7], (n_layers, w, n), w),
+        "conv_c": nrm(ks[8], (n_layers, w, n), w),
+        "conv_x_bias": jnp.zeros((n_layers, di), dt),
+        "conv_b_bias": jnp.zeros((n_layers, n), dt),
+        "conv_c_bias": jnp.zeros((n_layers, n), dt),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[9], (n_layers, h), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "D": jnp.ones((n_layers, h), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(u)).astype(jnp.float32),
+        "norm": jnp.zeros((n_layers, di), dt),
+        "out_proj": nrm(ks[0], (n_layers, di, d), di),
+    }
+
+
+def _causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """x (B, S, C), w (W, C): causal conv as W shifted adds (HLO-compact)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    s = x.shape[1]
+    y = sum(xp[:, i : i + s, :] * w[i] for i in range(width))
+    return y + b
+
+
+def mamba_forward(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, D)
+    cfg: ModelConfig,
+    state: Optional[dict] = None,  # populated at prefill end when serving
+):
+    """Full-sequence SSD. Returns (y, final_state or None)."""
+    bsz, s_orig, d = x.shape
+    di, h, n = _dims(cfg)
+    ph = cfg.ssm_headdim
+    q = min(cfg.ssm_chunk, s_orig)
+    pad = (-s_orig) % q
+    if pad:  # pad the sequence; padded steps get dt=0 (state frozen)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+    seq_mask = (jnp.arange(s) < s_orig).astype(jnp.float32)
+
+    cim = cfg.cim
+    tp_ok = h % max(axis_size("tp"), 1) == 0
+    hsh = ("dp", None, "tp" if tp_ok else None)
+    z = constrain(dense(x, p["in_z"], None, cim), hsh)
+    xs = constrain(dense(x, p["in_x"], None, cim), hsh)
+    b_ = constrain(dense(x, p["in_b"], None, cim), ("dp", None, None))
+    c_ = constrain(dense(x, p["in_c"], None, cim), ("dp", None, None))
+    dt = constrain(dense(x, p["in_dt"], None, cim), hsh)
+
+    cw = lambda t: t.astype(x.dtype)
+    xs_raw, b_raw, c_raw = xs, b_, c_
+    xs = jax.nn.silu(_causal_depthwise_conv(xs, cw(p["conv_x"]), cw(p["conv_x_bias"])))
+    b_ = jax.nn.silu(_causal_depthwise_conv(b_, cw(p["conv_b"]), cw(p["conv_b_bias"])))
+    c_ = jax.nn.silu(_causal_depthwise_conv(c_, cw(p["conv_c"]), cw(p["conv_c_bias"])))
+    xs = xs.reshape(bsz, s, h, ph)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    dt = dt * seq_mask[None, :, None]  # padded steps: no state update/decay
+    a = -jnp.exp(p["A_log"])  # (H,)
+    da = dt * a  # (B,S,H)
+
+    # chunked SSD in f32
+    xf = xs.astype(jnp.float32).reshape(bsz, nc, q, h, ph)
+    bf = b_.astype(jnp.float32).reshape(bsz, nc, q, n)
+    cf = c_.astype(jnp.float32).reshape(bsz, nc, q, n)
+    dtc = dt.reshape(bsz, nc, q, h)
+    dac = da.reshape(bsz, nc, q, h)
+    da_cs = jnp.cumsum(dac, axis=2)  # (B,NC,Q,H)
+
+    # intra-chunk: Y[q] = sum_{k<=q} C_q·B_k * exp(cs_q - cs_k) * dt_k * x_k
+    att = jnp.einsum("bcqn,bckn->bcqk", cf, bf)  # (B,NC,Q,Q)
+    seg = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]  # (B,NC,Q,K,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -jnp.inf))
+    w_qk = att[..., None] * decay * dtc[:, :, None, :, :]  # (B,NC,Q,K,H)
+    y = jnp.einsum("bcqkh,bckhp->bcqhp", w_qk, xf)
+
+    # chunk states: S_c = sum_k B_k ⊗ x_k * dt_k * exp(cs_last - cs_k)
+    decay_out = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # (B,NC,Q,H)
+    sterm = jnp.einsum("bckn,bckh,bckhp->bchpn", bf, dtc * decay_out, xf)
+
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])  # (B,NC,H)
+
+    def scan_chunks(carry, xs_):
+        s_prev = carry  # (B,H,P,N)
+        sterm_c, cdec = xs_
+        s_new = s_prev * cdec[:, :, None, None] + sterm_c
+        return s_new, s_prev
+
+    init = (
+        state["ssm"].astype(jnp.float32)
+        if state is not None and "ssm" in state
+        else jnp.zeros((bsz, h, ph, n), jnp.float32)
+    )
+    s_last, s_prevs = lax.scan(
+        scan_chunks,
+        init,
+        (sterm.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # (B,NC,H,P,N)
+
+    # inter-chunk: Y_off[q] = C_q · S_prev * exp(cs_q)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cf, s_prevs, jnp.exp(da_cs))
+    y = (y + y_off).reshape(bsz, s, h, ph)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(x.dtype)[:, :s_orig]
+
+    # gated RMSNorm + out proj
+    y = rms_norm(y * jax.nn.silu(z[:, :s_orig]), p["norm"], cfg.norm_eps)
+    out = constrain(dense(y, p["out_proj"], None, cim), ("dp", None, None))
+
+    new_state = None
+    if state is not None:
+        w1 = cfg.ssm_conv_width - 1
+        tail = lambda t: jnp.pad(
+            t[:, :s_orig], ((0, 0), (max(0, w1 - s_orig), 0), (0, 0))
+        )[:, -w1:, :]
+        new_state = {
+            "ssm": s_last.astype(jnp.float32),
+            "conv_x": tail(xs_raw),
+            "conv_b": tail(b_raw),
+            "conv_c": tail(c_raw),
+        }
+    return out, new_state
+
+
+def mamba_decode_step(
+    p: dict,
+    x: jnp.ndarray,  # (B, 1, D)
+    cfg: ModelConfig,
+    state: dict,  # {"ssm": (B,H,P,N) f32, "conv_{x,b,c}": (B, W-1, ·)}
+):
+    bsz = x.shape[0]
+    di, h, n = _dims(cfg)
+    ph = cfg.ssm_headdim
+    cim = cfg.cim
+
+    x0 = x[:, 0, :]
+    z = dense(x0, p["in_z"], None, cim)
+    xs = dense(x0, p["in_x"], None, cim)
+    b_ = dense(x0, p["in_b"], None, cim)
+    c_ = dense(x0, p["in_c"], None, cim)
+    dt = dense(x0, p["in_dt"], None, cim)
+
+    def conv_step(prev, new, w, b):  # prev (B,W-1,C), new (B,C)
+        win = jnp.concatenate([prev, new[:, None, :]], axis=1)
+        out = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", win.astype(jnp.float32), w.astype(jnp.float32))
+            + b.astype(jnp.float32)
+        )
+        return out, win[:, 1:, :]
+
+    xs_c, new_cx = conv_step(state["conv_x"], xs, p["conv_x"], p["conv_x_bias"])
+    b_c, new_cb = conv_step(state["conv_b"], b_, p["conv_b"], p["conv_b_bias"])
+    c_c, new_cc = conv_step(state["conv_c"], c_, p["conv_c"], p["conv_c_bias"])
+    xs_c = xs_c.reshape(bsz, h, ph)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)  # (B,H)
+
+    s_new = state["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xs_c, b_c
+    )
+    y = jnp.einsum("bhpn,bn->bhp", s_new, c_c) + p["D"][None, :, None] * xs_c
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, None, :].astype(x.dtype)), p["norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"], None, cim)
+    return out, {
+        "ssm": s_new,
+        "conv_x": new_cx.astype(state["conv_x"].dtype),
+        "conv_b": new_cb.astype(state["conv_b"].dtype),
+        "conv_c": new_cc.astype(state["conv_c"].dtype),
+    }
+
+
+def make_mamba_state(cfg: ModelConfig, batch: int, n_layers: int):
+    di, h, n = _dims(cfg)
+    w1 = cfg.ssm_conv_width - 1
+    dt = cdtype(cfg)
+    return {
+        "ssm": jnp.zeros((n_layers, batch, h, cfg.ssm_headdim, n), jnp.float32),
+        "conv_x": jnp.zeros((n_layers, batch, w1, di), dt),
+        "conv_b": jnp.zeros((n_layers, batch, w1, n), dt),
+        "conv_c": jnp.zeros((n_layers, batch, w1, n), dt),
+    }

@@ -1,0 +1,150 @@
+"""Unified model API: build_model(cfg) -> init / loss / prefill / decode.
+
+Families:
+  * dense / moe  -> transformer.py
+  * mamba        -> pure Mamba2 stack (here)
+  * hybrid       -> zamba2.py
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2, transformer, zamba2
+
+__all__ = ["Model", "build_model"]
+
+
+class Model(NamedTuple):
+    config: ModelConfig
+    init: Callable[[jax.Array], Any]
+    forward: Callable[..., Any]  # (params, inputs) -> (h, aux)
+    loss_fn: Callable[..., Any]  # (params, batch) -> (loss, metrics)
+    make_cache: Callable[..., Any]  # (batch, seq_len) -> cache
+    prefill: Callable[..., Any]  # (params, inputs, cache) -> (logits_last, cache)
+    decode_step: Callable[..., Any]  # (params, token, pos, cache) -> (logits, cache)
+
+
+# ---------------------------------------------------------------------------
+# Pure Mamba2 stack
+# ---------------------------------------------------------------------------
+
+
+def _init_mamba_lm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "embed": L.init_embedding(ks[0], cfg),
+        "mamba": mamba2.init_mamba(ks[1], cfg, cfg.n_layers),
+        "ln": jnp.zeros((cfg.n_layers, cfg.d_model), L.pdtype(cfg)),
+        "ln_f": jnp.zeros((cfg.d_model,), L.pdtype(cfg)),
+    }
+
+
+def _mamba_lm_forward(p, x_in, cfg: ModelConfig, cache=None, decode=False, pos=None):
+    if decode:
+        x = (
+            x_in[:, None, :].astype(L.cdtype(cfg))
+            if cfg.input_kind == "embeddings"
+            else L.embed(p["embed"], x_in[:, None], cfg)
+        )
+    else:
+        x = L.embed(p["embed"], x_in, cfg)
+
+    lp_all = {"p": p["mamba"], "ln": p["ln"]}
+
+    def body(x, xs):
+        lp, st = xs
+        hn = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+        if decode:
+            y, new_st = mamba2.mamba_decode_step(lp["p"], hn, cfg, st)
+        else:
+            y, new_st = mamba2.mamba_forward(lp["p"], hn, cfg, st)
+        return x + y, new_st
+
+    if cfg.remat != "none" and not decode:
+        body = jax.checkpoint(body)
+    if cache is None:
+        dummy = None
+        x, _ = lax.scan(lambda c, lp: body(c, (lp, dummy)), x, lp_all)
+        new_cache = None
+    else:
+        x, new_cache = lax.scan(body, x, (lp_all, cache))
+    h = L.rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# build_model
+# ---------------------------------------------------------------------------
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        init = lambda key: transformer.init_transformer(key, cfg)
+        fwd = lambda p, x: transformer.transformer_forward(p, x, cfg)
+
+        def make_cache(batch, seq_len):
+            return L.make_attn_cache(cfg, batch, seq_len, cfg.n_layers)
+
+        def prefill(p, x, cache):
+            h, cache = transformer.transformer_prefill(p, x, cfg, cache)
+            return L.logits_step(p["embed"], h[:, -1:, :], cfg), cache
+
+        def decode_step(p, token, pos, cache):
+            return transformer.transformer_decode(p, token, cfg, pos, cache)
+
+    elif fam == "mamba":
+        init = lambda key: _init_mamba_lm(key, cfg)
+        fwd = lambda p, x: (_mamba_lm_forward(p, x, cfg)[0], jnp.zeros((), jnp.float32))
+
+        def make_cache(batch, seq_len):
+            return mamba2.make_mamba_state(cfg, batch, cfg.n_layers)
+
+        def prefill(p, x, cache):
+            h, cache = _mamba_lm_forward(p, x, cfg, cache=cache)
+            return L.logits_step(p["embed"], h[:, -1:, :], cfg), cache
+
+        def decode_step(p, token, pos, cache):
+            h, cache = _mamba_lm_forward(p, token, cfg, cache=cache, decode=True, pos=pos)
+            return L.logits_step(p["embed"], h, cfg), cache
+
+    elif fam == "hybrid":
+        init = lambda key: zamba2.init_zamba(key, cfg)
+        fwd = lambda p, x: zamba2.zamba_forward(p, x, cfg)
+
+        def make_cache(batch, seq_len):
+            return zamba2.make_zamba_cache(cfg, batch, seq_len)
+
+        def prefill(p, x, cache):
+            h, cache = zamba2.zamba_prefill(p, x, cfg, cache)
+            return L.logits_step(p["embed"], h[:, -1:, :], cfg), cache
+
+        def decode_step(p, token, pos, cache):
+            return zamba2.zamba_decode(p, token, cfg, pos, cache)
+
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    def loss_fn(params, batch):
+        h, aux = fwd(params, batch["inputs"])
+        xent = L.chunked_xent(params["embed"], h, batch["labels"], cfg)
+        loss = xent + cfg.router_aux_weight * aux
+        return loss, {"xent": xent, "aux": aux}
+
+    return Model(
+        config=cfg,
+        init=init,
+        forward=fwd,
+        loss_fn=loss_fn,
+        make_cache=make_cache,
+        prefill=prefill,
+        decode_step=decode_step,
+    )

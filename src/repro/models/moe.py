@@ -1,0 +1,141 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bucketed dispatch.
+
+GShard-style routing without the (tokens, E, capacity) one-hot blow-up:
+position-in-expert comes from a cumsum over a (tokens·k, E) one-hot, tokens
+are scatter-added into per-expert (E, C, D) buffers (expert dim sharded over
+the model axis = expert parallelism; SPMD inserts the all-to-alls), experts
+run as one batched einsum, and results gather back with router weights.
+
+Tokens beyond an expert's capacity are dropped (standard switch behavior);
+the auxiliary load-balance loss keeps the drop rate low.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import constrain, dense, pdtype
+
+__all__ = ["init_moe", "moe_ffn", "expert_capacity"]
+
+
+def init_moe(key, cfg: ModelConfig, n_layers: int):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+    return {
+        "router": jax.random.normal(ks[0], (n_layers, d, e), jnp.float32) / np.sqrt(d),
+        "w_gate": jax.random.normal(ks[1], (n_layers, e, d, f), dt) / np.sqrt(d),
+        "w_up": jax.random.normal(ks[2], (n_layers, e, d, f), dt) / np.sqrt(d),
+        "w_down": jax.random.normal(ks[3], (n_layers, e, f, d), dt) / np.sqrt(f),
+    }
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(np.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_ffn(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """x (B, S, D) -> (y (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    cap = expert_capacity(t, cfg)
+    xt = constrain(x.reshape(t, d), ("dp", None))
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position-in-expert via cumsum over flattened (T·k) choices, k-major so
+    # first choices win capacity slots
+    idx_f = idx.T.reshape(-1)  # (k·T,) choice-major
+    onehot = jax.nn.one_hot(idx_f, e, dtype=jnp.float32)  # (kT, E)
+    pos_f = (jnp.cumsum(onehot, axis=0) - 1.0)  # running count per expert
+    pos_f = jnp.take_along_axis(pos_f, idx_f[:, None], axis=1)[:, 0]  # (kT,)
+    keep = pos_f < cap
+    slot = jnp.where(keep, pos_f, cap).astype(jnp.int32)  # overflow -> slot `cap`
+
+    # dispatch: scatter tokens into (E, C+1, D); slot `cap` is the trash row
+    xt_rep = jnp.tile(xt, (k, 1))  # (kT, D) choice-major
+    buf = jnp.zeros((e, cap + 1, d), xt.dtype)
+    buf = buf.at[idx_f, slot].add(xt_rep)
+    buf = constrain(buf[:, :cap, :], ("tp", None, None))  # expert parallelism
+
+    # expert FFN (SwiGLU), batched over experts
+    cim = cfg.cim
+    if cim is not None and cim.mode != "exact":
+        # CiM path: per-expert quantized matmuls (vmapped over E)
+        from repro.core.cim_linear import cim_matmul
+
+        mm = jax.vmap(lambda xb, wb: cim_matmul(xb, wb, cim))
+        bf32 = buf.astype(jnp.float32)
+        h = jax.nn.silu(mm(bf32, p["w_gate"].astype(jnp.float32))) * mm(
+            bf32, p["w_up"].astype(jnp.float32)
+        )
+        out = mm(h, p["w_down"].astype(jnp.float32)).astype(buf.dtype)
+    else:
+        h = jax.nn.silu(
+            jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(buf.dtype))
+        ) * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(buf.dtype))
+        out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(h.dtype))  # (E, C, D)
+
+    # combine: gather back, apply gates, drop overflowed
+    out_pad = jnp.pad(out, ((0, 0), (0, 1), (0, 0)))  # restore trash row
+    y_f = out_pad[idx_f, slot]  # (kT, D)
+    gate_f = gate.T.reshape(-1) * keep.astype(jnp.float32)
+    y = (y_f.astype(jnp.float32) * gate_f[:, None]).reshape(k, t, d).sum(0)
+    y = constrain(y, ("dp", None))
+
+    # switch-style load-balance aux loss
+    frac_tokens = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    return y.astype(x.dtype).reshape(b, s, d), aux
+
+
+def moe_ffn_dense(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """Dense-masked expert compute — the collective-minimal MoE layout.
+
+    Every device computes its LOCAL experts (E sharded over the model axis)
+    on its LOCAL tokens (batch sharded over data): zero dispatch traffic; the
+    only communication is the final psum over the model axis when the
+    expert-weighted outputs combine. Trades ~E_local/top_k extra expert FLOPs
+    for the elimination of the scatter/all-to-all dispatch — a large win when
+    per-expert FFNs are small (qwen3-moe: 768 wide). No capacity drops.
+    (Perf iteration B1, EXPERIMENTS.md §Perf.)
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xt = constrain(x.reshape(t, d), ("dp", None))
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # (T, E) routing weights, zero off the top-k (small scatter: T x E floats)
+    w_te = jnp.zeros((t, e), jnp.float32)
+    w_te = w_te.at[jnp.arange(t)[:, None], idx].add(gate)
+    w_te = constrain(w_te.astype(x.dtype), ("dp", None))
+
+    # local experts on local tokens: (E, T, F) sharded (tp, dp, -)
+    hg = jnp.einsum("td,edf->etf", xt, p["w_gate"].astype(xt.dtype))
+    hu = jnp.einsum("td,edf->etf", xt, p["w_up"].astype(xt.dtype))
+    h = constrain(jax.nn.silu(hg) * hu, ("tp", "dp", None))
+    # fold routing weights in BEFORE the down projection so the (E, T, D)
+    # intermediate never materializes; contraction over (e, f) psums over tp
+    hw = h * w_te.T[:, :, None]
+    y = jnp.einsum("etf,efd->td", hw, p["w_down"].astype(h.dtype))
+    y = constrain(y, ("dp", None))
+
+    frac_tokens = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return y.astype(x.dtype).reshape(b, s, d), aux

@@ -1,0 +1,186 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared-weight* attention block.
+
+Every ``share_period`` Mamba2 layers, a single transformer block (whose
+weights are shared across all applications, Zamba2's signature trick) is
+applied. Layout: ``n_layers`` Mamba2 layers split into G = n_layers //
+share_period groups (each followed by the shared block) plus a tail of
+``n_layers % share_period`` Mamba2 layers.
+
+The shared block's weights are a scan *closure constant* — faithful to the
+weight sharing — while each application has its own KV cache at serve time.
+Long-context cells cap the shared attention with a sliding window
+(cfg.sliding_window), which is what makes the hybrid sub-quadratic-capable
+(see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.mamba2 import (
+    init_mamba,
+    make_mamba_state,
+    mamba_decode_step,
+    mamba_forward,
+)
+
+__all__ = [
+    "init_zamba",
+    "zamba_forward",
+    "zamba_prefill",
+    "zamba_decode",
+    "make_zamba_cache",
+]
+
+
+def _split(cfg: ModelConfig):
+    g = cfg.n_layers // cfg.share_period
+    tail = cfg.n_layers - g * cfg.share_period
+    return g, cfg.share_period, tail
+
+
+def init_zamba(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
+    return {
+        "embed": L.init_embedding(ks[0], cfg),
+        "mamba": init_mamba(ks[1], cfg, cfg.n_layers),
+        "mamba_ln": jnp.zeros((cfg.n_layers, cfg.d_model), L.pdtype(cfg)),
+        "shared": {
+            "attn": squeeze(L.init_attention(ks[2], cfg, 1)),
+            "mlp": squeeze(L.init_mlp(ks[3], cfg, 1)),
+            "ln1": jnp.zeros((cfg.d_model,), L.pdtype(cfg)),
+            "ln2": jnp.zeros((cfg.d_model,), L.pdtype(cfg)),
+        },
+        "ln_f": jnp.zeros((cfg.d_model,), L.pdtype(cfg)),
+    }
+
+
+def _group_tree(tree, g, period):
+    """(L, ...) stacked params -> head (G, period, ...) and tail (T, ...)."""
+    head = jax.tree.map(lambda a: a[: g * period].reshape(g, period, *a.shape[1:]), tree)
+    tail = jax.tree.map(lambda a: a[g * period :], tree)
+    return head, tail
+
+
+def _mamba_layer(x, lp, cfg, state=None, decode=False):
+    hn = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+    if decode:
+        y, new_state = mamba_decode_step(lp["p"], hn, cfg, state)
+    else:
+        y, new_state = mamba_forward(lp["p"], hn, cfg, state)
+    return x + y, new_state
+
+
+def _shared_block(x, shared, cfg, positions, cache=None, pos=None, decode=False):
+    hn = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+    if decode:
+        h, new_cache = L.decode_attention(shared["attn"], hn, cfg, pos, cache)
+    else:
+        h, new_cache = L.attention(shared["attn"], hn, cfg, positions, cache=cache)
+    x = x + h
+    x = x + L.mlp(shared["mlp"], L.rms_norm(x, shared["ln2"], cfg.norm_eps), cfg)
+    return x, new_cache
+
+
+def zamba_forward(p: dict, x_in: jnp.ndarray, cfg: ModelConfig):
+    """Training forward -> (h, aux=0)."""
+    x = L.embed(p["embed"], x_in, cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    g, period, tail = _split(cfg)
+    mt = {"p": p["mamba"], "ln": p["mamba_ln"]}
+    head, tailp = _group_tree(mt, g, period)
+
+    def inner(x, lp):
+        x, _ = _mamba_layer(x, lp, cfg)
+        return x, None
+
+    def group(x, gp):
+        x, _ = lax.scan(inner, x, gp)
+        x, _ = _shared_block(x, p["shared"], cfg, positions)
+        return x, None
+
+    inner_ = jax.checkpoint(inner) if cfg.remat != "none" else inner
+    group_ = jax.checkpoint(group) if cfg.remat != "none" else group
+    x, _ = lax.scan(group_, x, head)
+    if tail:
+        x, _ = lax.scan(inner_, x, tailp)
+    return L.rms_norm(x, p["ln_f"], cfg.norm_eps), jnp.zeros((), jnp.float32)
+
+
+def make_zamba_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    g, _, _ = _split(cfg)
+    return {
+        "mamba": make_mamba_state(cfg, batch, cfg.n_layers),
+        "attn": L.make_attn_cache(cfg, batch, seq_len, n_layers=g),
+    }
+
+
+def zamba_prefill(p: dict, x_in: jnp.ndarray, cfg: ModelConfig, cache: dict):
+    x = L.embed(p["embed"], x_in, cfg)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    g, period, tail = _split(cfg)
+    mt = {"p": p["mamba"], "ln": p["mamba_ln"]}
+    head, tailp = _group_tree(mt, g, period)
+    mstate = cache["mamba"]
+    mhead, mtail = _group_tree(mstate, g, period)
+
+    def inner(x, xs):
+        lp, st = xs
+        x, new_st = _mamba_layer(x, lp, cfg, state=st)
+        return x, new_st
+
+    def group(x, xs):
+        gp, gst, acache = xs
+        x, new_st = lax.scan(inner, x, (gp, gst))
+        x, new_cache = _shared_block(x, p["shared"], cfg, positions, cache=acache)
+        return x, (new_st, new_cache)
+
+    x, (new_head_st, new_attn) = lax.scan(group, x, (head, mhead, cache["attn"]))
+    if tail:
+        x, new_tail_st = lax.scan(inner, x, (tailp, mtail))
+    else:
+        new_tail_st = mtail
+    merge = lambda h, t: jnp.concatenate([h.reshape(-1, *h.shape[2:]), t], axis=0)
+    new_mamba = jax.tree.map(merge, new_head_st, new_tail_st)
+    h = L.rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return h, {"mamba": new_mamba, "attn": new_attn}
+
+
+def zamba_decode(p: dict, token, cfg: ModelConfig, pos, cache: dict):
+    if cfg.input_kind == "embeddings":
+        x = token[:, None, :].astype(L.cdtype(cfg))
+    else:
+        x = L.embed(p["embed"], token[:, None], cfg)
+    g, period, tail = _split(cfg)
+    mt = {"p": p["mamba"], "ln": p["mamba_ln"]}
+    head, tailp = _group_tree(mt, g, period)
+    mhead, mtail = _group_tree(cache["mamba"], g, period)
+
+    def inner(x, xs):
+        lp, st = xs
+        x, new_st = _mamba_layer(x, lp, cfg, state=st, decode=True)
+        return x, new_st
+
+    def group(x, xs):
+        gp, gst, acache = xs
+        x, new_st = lax.scan(inner, x, (gp, gst))
+        x, new_cache = _shared_block(x, p["shared"], cfg, None, cache=acache, pos=pos, decode=True)
+        return x, (new_st, new_cache)
+
+    x, (new_head_st, new_attn) = lax.scan(group, x, (head, mhead, cache["attn"]))
+    if tail:
+        x, new_tail_st = lax.scan(inner, x, (tailp, mtail))
+    else:
+        new_tail_st = mtail
+    merge = lambda h, t: jnp.concatenate([h.reshape(-1, *h.shape[2:]), t], axis=0)
+    new_mamba = jax.tree.map(merge, new_head_st, new_tail_st)
+    h = L.rms_norm(x, p["ln_f"], cfg.norm_eps)
+    logits = L.logits_step(p["embed"], h, cfg)
+    return logits, {"mamba": new_mamba, "attn": new_attn}

@@ -1,0 +1,27 @@
+"""Optimizers (AdamW, Adafactor), LR schedules, gradient compression."""
+
+from repro.optim.adafactor import AdafactorState, adafactor_init, adafactor_update
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import warmup_cosine, warmup_linear
+
+
+def make_optimizer(name: str):
+    """Returns (init_fn, update_fn) for the configured optimizer."""
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "AdafactorState",
+    "adafactor_init",
+    "adafactor_update",
+    "warmup_cosine",
+    "warmup_linear",
+    "make_optimizer",
+]

@@ -1,0 +1,96 @@
+"""Adafactor (factored second moments, no momentum) — O(rows+cols) state.
+
+Used for the 405B-scale configs where Adam's 8 bytes/param of optimizer state
+would not fit the single-pod HBM budget (see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdafactorState", "adafactor_init", "adafactor_update"]
+
+
+class AdafactorState(NamedTuple):
+    v_row: Any  # factored stats for >=2D leaves (zeros-shaped otherwise)
+    v_col: Any
+    v_full: Any  # full stats for <2D leaves
+    count: jnp.ndarray
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) else jnp.zeros((1,), jnp.float32)
+
+    def vc(p):
+        return (
+            jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            if _factored(p)
+            else jnp.zeros((1,), jnp.float32)
+        )
+
+    def vf(p):
+        return jnp.zeros((1,), jnp.float32) if _factored(p) else jnp.zeros(p.shape, jnp.float32)
+
+    return AdafactorState(
+        v_row=jax.tree.map(vr, params),
+        v_col=jax.tree.map(vc, params),
+        v_full=jax.tree.map(vf, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def adafactor_update(
+    grads,
+    state: AdafactorState,
+    params,
+    lr,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+):
+    count = state.count + 1
+
+    def upd(p, g, vr, vc, vf):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p):
+            vr = decay * vr + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * vc + (1 - decay) * g2.mean(axis=-2)
+            # v_hat = (vr ⊗ vc) / mean(vr)  (Shazeer & Stern, 2018)
+            denom = (
+                jnp.sqrt(vr)[..., None]
+                * jnp.sqrt(vc)[..., None, :]
+                * jax.lax.rsqrt(jnp.maximum(vr.mean(axis=-1, keepdims=True), eps))[..., None]
+            )
+            u = g / jnp.maximum(denom, eps)
+        else:
+            vf = decay * vf + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(vf)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        newp = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), vr, vc, vf
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_vr = tdef.flatten_up_to(state.v_row)
+    flat_vc = tdef.flatten_up_to(state.v_col)
+    flat_vf = tdef.flatten_up_to(state.v_full)
+    outs = [upd(p, g, vr, vc, vf) for p, g, vr, vc, vf in zip(flat_p, flat_g, flat_vr, flat_vc, flat_vf)]
+    new_params = tdef.unflatten([o[0] for o in outs])
+    new_state = AdafactorState(
+        v_row=tdef.unflatten([o[1] for o in outs]),
+        v_col=tdef.unflatten([o[2] for o in outs]),
+        v_full=tdef.unflatten([o[3] for o in outs]),
+        count=count,
+    )
+    return new_params, new_state, {"grad_norm": jnp.zeros(())}

@@ -1,0 +1,61 @@
+"""Int8 gradient compression for the data-parallel all-reduce.
+
+At 1000+-node scale the DP gradient all-reduce dominates the interconnect;
+quantizing gradients to int8 with per-leaf scales cuts the wire bytes 4x
+(vs f32) / 2x (vs bf16). Implemented as a quantize -> psum(int32) -> dequant
+wrapper usable inside ``shard_map``; an error-feedback buffer keeps the
+compression unbiased over steps (residual is re-added next step).
+
+``compressed_psum_tree`` is wired into the train step behind
+``TrainSettings.grad_compression`` (launch/train.py); wire-byte accounting
+for the roofline lives in roofline/analysis.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_tree", "init_error_feedback"]
+
+
+def quantize_int8(g: jnp.ndarray):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray):
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum_tree(grads, axis_name: str, error_feedback=None):
+    """Per-leaf int8 quantization + psum over ``axis_name``.
+
+    Returns (mean-reduced grads, new error feedback). Call inside shard_map /
+    pjit with a named axis. The int32 psum models the int8 ring-reduce wire
+    format (accumulation must widen to avoid overflow at >127 summands).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + (e if e is not None else 0.0)
+        # shared scale so the int8 payloads are summable across devices
+        scale = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis_name) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        resid = g32 - q.astype(jnp.float32) * scale  # error feedback
+        tot = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        out = tot.astype(jnp.float32) * scale / n
+        return out, resid
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error_feedback) if error_feedback is not None else [None] * len(flat_g)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in outs]), tdef.unflatten([o[1] for o in outs])

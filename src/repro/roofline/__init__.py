@@ -1,0 +1,5 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from repro.roofline.analysis import RooflineReport, model_flops, roofline
+
+__all__ = ["RooflineReport", "model_flops", "roofline"]

@@ -1,0 +1,8 @@
+"""Target hardware constants: TPU v5e (per assignment)."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_LINK_BW = 50e9  # bytes/s per link (~50 GB/s/link per assignment)
+HBM_BYTES = 16 * 2**30  # 16 GiB per chip
+VMEM_BYTES = 128 * 2**20  # ~128 MiB vector memory
+MXU_TILE = 128

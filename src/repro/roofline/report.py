@@ -1,0 +1,134 @@
+"""Render the EXPERIMENTS.md roofline tables from cached dry-run JSON.
+
+  PYTHONPATH=src python -m repro.roofline.report [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def _fmt_t(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s * 1e6:.0f}us"
+
+
+def load(dir_: Path, mesh: str):
+    recs = []
+    for f in sorted(dir_.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        recs.append(r)
+    return recs
+
+
+def next_lever(rec) -> str:
+    """One sentence: what would move the dominant term down (per assignment)."""
+    rf = rec["roofline"]
+    arch, shape, b = rec["arch"], rec["shape"], rf["bottleneck"]
+    is_moe = "moe" in arch or "moonshot" in arch
+    is_ssm = arch.startswith(("mamba", "zamba"))
+    if b == "collective":
+        if is_moe:
+            return "eliminate MoE dispatch gathers (dense-masked experts, iter B1)"
+        return "reduce TP activation psums: bf16 boundary dtypes + overlap via latency-hiding scheduler"
+    if b == "memory":
+        if "decode" in shape or "long" in shape:
+            return "int8 KV cache + int8 weight dots (iters C1/C2) cut the dominant cache/weight reads"
+        if is_ssm:
+            return "fuse the SSD chunk pipeline (Pallas) so decay/state tensors stay in VMEM"
+        if "prefill" in shape:
+            return "fused flash-attention kernel keeps score tiles in VMEM (kernels/flash_attention.py)"
+        return "bf16 materialization + chunk-remat (iters A1c/A2/A3); next: fused attention kernel"
+    return "raise arithmetic intensity: larger per-device batch or wider TP sharding of heads"
+
+
+def roofline_table(recs) -> str:
+    hdr = (
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck | "
+        "mem/dev | MODEL/HLO flops | roofline frac | top collective | what would move the dominant term |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | FAIL | | | | | | | {r.get('error','')[:40]} | |"
+            )
+            continue
+        rf = r["roofline"]
+        colls = {
+            k: v["bytes"]
+            for k, v in rf["collectives"].items()
+            if isinstance(v, dict) and v["bytes"] > 0
+        }
+        top = max(colls, key=colls.get) if colls else "-"
+        tops = f"{top} {colls[top]/2**30:.1f}GiB" if colls else "-"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_t(rf['t_compute'])} | "
+            f"{_fmt_t(rf['t_memory'])} | {_fmt_t(rf['t_collective'])} | "
+            f"{rf['bottleneck']} | {r['memory']['bytes']/2**30:.2f}GiB | "
+            f"{rf['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} | {tops} | "
+            f"{next_lever(r)} |"
+        )
+    return hdr + "\n".join(rows) + "\n"
+
+
+def collective_schedule(recs, picks) -> str:
+    """Per-cell collective op counts/bytes by kind (the collective schedule)."""
+    out = [
+        "| arch | shape | all-gather | all-reduce | reduce-scatter | all-to-all | permute |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch, shape in picks:
+        rec = next(
+            (r for r in recs if r["arch"] == arch and r["shape"] == shape and r.get("status") == "ok"),
+            None,
+        )
+        if rec is None:
+            continue
+        c = rec["roofline"]["collectives"]
+        cell = lambda k: f"{c[k]['count']}× / {c[k]['bytes']/2**30:.1f}GiB"
+        out.append(
+            f"| {arch} | {shape} | {cell('all-gather')} | {cell('all-reduce')} | "
+            f"{cell('reduce-scatter')} | {cell('all-to-all')} | {cell('collective-permute')} |"
+        )
+    return "\n".join(out)
+
+
+def summary(recs) -> dict:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    worst = sorted(ok, key=lambda r: r["roofline_fraction"])[:5]
+    coll = sorted(
+        ok,
+        key=lambda r: -(
+            r["roofline"]["t_collective"]
+            / max(r["roofline"]["t_compute"] + r["roofline"]["t_memory"], 1e-12)
+        ),
+    )[:5]
+    return {
+        "n_ok": len(ok),
+        "n_fail": len(recs) - len(ok),
+        "worst_fraction": [(r["arch"], r["shape"], round(r["roofline_fraction"], 4)) for r in worst],
+        "most_collective_bound": [
+            (r["arch"], r["shape"], round(r["roofline"]["t_collective"], 3)) for r in coll
+        ],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="singlepod")
+    args = ap.parse_args()
+    recs = load(Path(args.dir), args.mesh)
+    print(roofline_table(recs))
+    print(json.dumps(summary(recs), indent=2))
+
+
+if __name__ == "__main__":
+    main()

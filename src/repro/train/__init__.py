@@ -1,0 +1,6 @@
+"""Training workloads: LM train loop lives in launch/train.py; the paper's
+MNIST-CiM evaluation lives here."""
+
+from repro.train.mnist_mlp import evaluate, train_mlp
+
+__all__ = ["train_mlp", "evaluate"]

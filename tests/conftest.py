@@ -1,0 +1,6 @@
+import os
+
+# Keep smoke tests on the single real CPU device (the dry-run sets its own
+# 512-device flag in repro.launch.dryrun, which must be the FIRST import
+# there — never set globally here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

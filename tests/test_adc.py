@@ -1,0 +1,123 @@
+"""Memory-immersed ADC: mode equivalence, staircase, DNL/INL (paper Fig. 6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc
+from repro.core import search_tree as st
+from repro.core.mav_stats import analytic_code_pmf
+
+
+@pytest.fixture(scope="module")
+def ramp():
+    return jnp.linspace(0.0, 0.999, 4096)
+
+
+@pytest.mark.parametrize("bits", [3, 5, 6])
+@pytest.mark.parametrize("mode", ["sar", "flash"])
+def test_modes_match_ideal(ramp, bits, mode):
+    cfg = adc.ADCConfig(bits=bits, mode=mode, n_ref_columns=max(32, 1 << bits))
+    res = adc.convert(ramp, cfg)
+    ideal = adc.quantize_ideal(ramp, bits)
+    np.testing.assert_array_equal(np.asarray(res.codes), np.asarray(ideal))
+
+
+def test_asym_tree_same_codes(ramp):
+    """The asymmetric search changes the comparison COUNT, not the codes."""
+    pmf = analytic_code_pmf(16, 5)
+    tree = st.optimal_tree(pmf)
+    cfg = adc.ADCConfig(bits=5, mode="sar_asym")
+    res = adc.convert(ramp, cfg, tree=tree)
+    ideal = adc.quantize_ideal(ramp, 5)
+    np.testing.assert_array_equal(np.asarray(res.codes), np.asarray(ideal))
+    # comparisons vary per code and average below 5 under the skewed pmf
+    mav_like = jnp.asarray(
+        np.random.default_rng(0).binomial(16, 0.25, 20000) / 16.0
+    )
+    r2 = adc.convert(mav_like, cfg, tree=tree)
+    assert float(r2.comparisons.mean()) < 4.0
+
+
+@pytest.mark.parametrize("flash_bits", [1, 2, 3])
+def test_hybrid_codes_and_cycles(ramp, flash_bits):
+    cfg = adc.ADCConfig(bits=5, mode="hybrid", flash_bits=flash_bits)
+    res = adc.convert(ramp, cfg)
+    ideal = adc.quantize_ideal(ramp, 5)
+    np.testing.assert_array_equal(np.asarray(res.codes), np.asarray(ideal))
+    # latency: 1 flash cycle + (bits - flash_bits) SAR cycles
+    assert int(res.cycles.max()) == 1 + (5 - flash_bits)
+    # energy: all 2^f - 1 flash comparators fire + SAR comparisons
+    assert int(res.comparisons.max()) == (1 << flash_bits) - 1 + (5 - flash_bits)
+
+
+def test_hybrid_with_asymmetric_fine_trees(ramp):
+    """Hybrid + per-segment asymmetric trees (paper §II-C composition)."""
+    pmf = analytic_code_pmf(16, 5)
+    seg = 1 << 3  # 2 flash bits -> segments of 8 codes
+    fine = []
+    for s in range(4):
+        p = pmf[s * seg : (s + 1) * seg]
+        fine.append(st.optimal_tree(p / max(p.sum(), 1e-12)))
+    cfg = adc.ADCConfig(bits=5, mode="hybrid", flash_bits=2)
+    res = adc.convert(ramp, cfg, fine_trees=fine)
+    ideal = adc.quantize_ideal(ramp, 5)
+    np.testing.assert_array_equal(np.asarray(res.codes), np.asarray(ideal))
+
+
+def test_staircase_monotonic_under_mismatch():
+    cfg = adc.ADCConfig(bits=5, mode="sar", ref_mismatch_sigma=0.02)
+    r, codes = adc.measure_transfer(cfg, key=jax.random.PRNGKey(0))
+    assert (np.diff(codes) >= 0).all(), "staircase must stay monotonic"
+
+
+def test_dnl_inl_zero_without_mismatch():
+    cfg = adc.ADCConfig(bits=5, mode="sar")
+    r, codes = adc.measure_transfer(cfg, n_points=1 << 14)
+    dnl, inl = adc.dnl_inl(r, codes, cfg)
+    assert np.nanmax(np.abs(dnl)) < 0.05
+    assert np.nanmax(np.abs(inl)) < 0.05
+
+
+def test_dnl_inl_paper_band():
+    """Fig. 6: with the chip's cap matching, DNL/INL stay below 0.5 LSB."""
+    cfg = adc.ADCConfig(bits=5, mode="sar", ref_mismatch_sigma=0.01)
+    worst_dnl = worst_inl = 0.0
+    for seed in range(5):
+        r, codes = adc.measure_transfer(
+            cfg, key=jax.random.PRNGKey(seed), n_points=1 << 14
+        )
+        dnl, inl = adc.dnl_inl(r, codes, cfg)
+        worst_dnl = max(worst_dnl, np.nanmax(np.abs(dnl)))
+        worst_inl = max(worst_inl, np.nanmax(np.abs(inl)))
+    assert worst_dnl < 0.5 and worst_inl < 0.5
+
+
+def test_comparator_noise_degrades_gracefully():
+    cfg_clean = adc.ADCConfig(bits=5, mode="sar")
+    cfg_noisy = adc.ADCConfig(bits=5, mode="sar", comparator_sigma=0.02)
+    v = jax.random.uniform(jax.random.PRNGKey(1), (20000,))
+    c0 = adc.convert(v, cfg_clean).codes
+    c1 = adc.convert(v, cfg_noisy, key=jax.random.PRNGKey(2)).codes
+    err = np.abs(np.asarray(c0) - np.asarray(c1))
+    assert err.mean() < 1.5  # noise shifts codes by ~sigma/LSB, not wildly
+    assert (err > 0).any()  # but it does perturb
+
+
+def test_reference_ladder_monotonic():
+    for seed in range(4):
+        cfg = adc.ADCConfig(bits=5, ref_mismatch_sigma=0.05)
+        lad = adc.make_reference_ladder(cfg, jax.random.PRNGKey(seed))
+        assert (jnp.diff(lad) > 0).all()
+        assert float(lad[0]) == 0.0
+        assert float(lad[-1]) == pytest.approx(cfg.vdd)
+
+
+def test_invalid_configs_raise():
+    with pytest.raises(ValueError):
+        adc.ADCConfig(bits=6, n_ref_columns=32)  # needs 64 columns
+    with pytest.raises(ValueError):
+        adc.ADCConfig(mode="nope")
+    with pytest.raises(ValueError):
+        adc.ADCConfig(mode="hybrid", flash_bits=5, bits=5)

@@ -1,0 +1,80 @@
+"""Checkpointing: roundtrip, atomicity, GC, elastic restore, async."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer, latest_step, restore, save
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (8, 16)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32), "c": jnp.float32(3.5)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(tmp_path, 5, t)
+    assert latest_step(tmp_path) == 5
+    back = restore(tmp_path, 5, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_last_gc(tmp_path):
+    t = _tree()
+    for s in range(6):
+        save(tmp_path, s, t, keep_last=3)
+    steps = sorted(int(p.name.split("_")[1]) for p in Path(tmp_path).glob("step_*"))
+    assert steps == [3, 4, 5]
+
+
+def test_atomic_no_tmp_left(tmp_path):
+    save(tmp_path, 1, _tree())
+    assert not list(Path(tmp_path).glob("*.tmp"))
+    assert (Path(tmp_path) / "step_000000001" / "manifest.json").exists()
+
+
+def test_manifest_records_global_shapes(tmp_path):
+    save(tmp_path, 2, _tree())
+    man = json.loads((Path(tmp_path) / "step_000000002" / "manifest.json").read_text())
+    assert man["keys"]["a"]["shape"] == [8, 16]
+
+
+def test_async_checkpointer(tmp_path):
+    c = Checkpointer(tmp_path, keep_last=2)
+    c.save_async(1, _tree())
+    c.save_async(2, _tree(1))  # waits for the first internally
+    c.wait()
+    assert latest_step(tmp_path) == 2
+
+
+def test_elastic_restore_other_sharding(tmp_path):
+    """Restore under a different mesh/sharding (elastic scaling)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    t = _tree()
+    save(tmp_path, 1, t)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    sh = {
+        "a": NamedSharding(mesh, P("data", None)),
+        "nested": {
+            "b": NamedSharding(mesh, P()),
+            "c": NamedSharding(mesh, P()),
+        },
+    }
+    back = restore(tmp_path, 1, t, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(t["a"]))
+    assert back["a"].sharding.spec == P("data", None)
+
+
+def test_restore_missing_step_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore(tmp_path, 99, _tree())

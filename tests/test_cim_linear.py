@@ -1,0 +1,112 @@
+"""CiM-quantized matmul: exactness regimes, quantization error, QAT gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cim_linear import CiMConfig, cim_matmul, digitization_stats, quantize_symmetric
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+def test_bitplane_exact_on_chip_geometry():
+    """16-row arrays + 5-bit ADC (the test chip) digitize exactly."""
+    x, w = _rand((8, 64)), _rand((64, 16), 1)
+    cfg = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+    y = cim_matmul(x, w, cfg)
+    xi, sx = quantize_symmetric(x, 4, True)
+    wi, sw = quantize_symmetric(w, 4, True, per_axis=-1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray((xi @ wi) * sx * sw), rtol=1e-5)
+
+
+@pytest.mark.parametrize("rows,adc_bits", [(16, 5), (32, 6), (64, 7), (128, 8)])
+def test_bitplane_exact_when_adc_resolves_rows(rows, adc_bits):
+    x, w = _rand((4, rows * 2)), _rand((rows * 2, 8), 1)
+    cfg = CiMConfig(
+        mode="bitplane", a_bits=3, w_bits=3, adc_bits=adc_bits, rows=rows, ste=False
+    )
+    y = cim_matmul(x, w, cfg)
+    xi, sx = quantize_symmetric(x, 3, True)
+    wi, sw = quantize_symmetric(w, 3, True, per_axis=-1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray((xi @ wi) * sx * sw), rtol=1e-5)
+
+
+def test_bitplane_lossy_when_adc_underresolves():
+    """2^B < rows: quantization error appears but stays bounded by theory."""
+    x, w = _rand((4, 128)), _rand((128, 8), 1)
+    cfg = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=64, ste=False)
+    y = cim_matmul(x, w, cfg)
+    xi, sx = quantize_symmetric(x, 4, True)
+    wi, sw = quantize_symmetric(w, 4, True, per_axis=-1)
+    ref = (xi @ wi) * sx * sw
+    err = np.abs(np.asarray(y - ref))
+    assert err.max() > 0  # lossy
+    # error bound: per plane-pair & tile, code error < LSB -> counts err < R/2^B
+    t, planes = 2, 4 * 4
+    wa = np.abs(np.array([1, 2, 4, -8]))
+    bound = (64 / 32) * (wa.sum() ** 2) * t * float(sx) * float(np.max(sw))
+    assert err.max() <= bound
+
+
+def test_unsigned_activations_paper_mode():
+    """Post-ReLU unsigned planes (the chip's single-ended mode)."""
+    x = jnp.abs(_rand((8, 64)))
+    w = _rand((64, 8), 1)
+    cfg = CiMConfig(
+        mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16,
+        a_signed=False, ste=False,
+    )
+    y = cim_matmul(x, w, cfg)
+    xi, sx = quantize_symmetric(x, 4, False)
+    wi, sw = quantize_symmetric(w, 4, True, per_axis=-1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray((xi @ wi) * sx * sw), rtol=1e-5)
+
+
+def test_fake_quant_error_shrinks_with_adc_bits():
+    x, w = _rand((16, 256)), _rand((256, 32), 1)
+    ref = x @ w
+    errs = []
+    for b in (4, 6, 8, 10):
+        cfg = CiMConfig(mode="fake_quant", adc_bits=b, rows=16, ste=False)
+        y = cim_matmul(x, w, cfg)
+        errs.append(float(jnp.abs(y - ref).max()))
+    assert errs[0] > errs[1] > errs[2] > errs[3]
+
+
+def test_ste_gradients_equal_exact_matmul():
+    x, w = _rand((4, 64)), _rand((64, 8), 1)
+    cfg = CiMConfig(mode="fake_quant", ste=True)
+    g_cim = jax.grad(lambda w: cim_matmul(x, w, cfg).sum())(w)
+    g_ref = jax.grad(lambda w: (x @ w).sum())(w)
+    np.testing.assert_allclose(np.asarray(g_cim), np.asarray(g_ref), atol=1e-6)
+
+
+def test_exact_mode_is_plain_matmul():
+    x, w = _rand((4, 32)), _rand((32, 8), 1)
+    cfg = CiMConfig(mode="exact")
+    np.testing.assert_allclose(
+        np.asarray(cim_matmul(x, w, cfg)), np.asarray(x @ w), rtol=1e-6
+    )
+
+
+def test_stats_accounting():
+    cfg = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+    x, w = _rand((2, 32)), _rand((32, 4), 1)
+    y, stats = cim_matmul(x, w, cfg, return_stats=True)
+    # conversions = A*W*M*T*N = 4*4*2*2*4
+    assert int(stats.conversions) == 4 * 4 * 2 * 2 * 4
+    # symmetric SAR: 5 comparisons per conversion
+    assert int(stats.comparisons) == int(stats.conversions) * 5
+    d = digitization_stats(CiMConfig(search="sar_asym"), 2, 32, 4)
+    assert 3.5 <= d["expected_comparisons_per_conversion"] <= 3.9
+
+
+def test_batched_inputs():
+    x = _rand((3, 5, 64))
+    w = _rand((64, 8), 1)
+    cfg = CiMConfig(mode="fake_quant", ste=False)
+    y = cim_matmul(x, w, cfg)
+    assert y.shape == (3, 5, 8)

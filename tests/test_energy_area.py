@@ -1,0 +1,75 @@
+"""Analytic area/energy/latency models: Table I anchors + Fig. 7a,b trends."""
+
+import pytest
+
+from repro.core.energy_area import (
+    ADC_STYLES,
+    area_um2,
+    design_space,
+    energy_pj,
+    latency_cycles,
+    table1,
+)
+
+
+def test_table1_anchors_exact():
+    t = table1()
+    assert t["sar"]["area_um2"] == pytest.approx(5235.20)
+    assert t["sar"]["energy_pj"] == pytest.approx(105.0)
+    assert t["flash"]["area_um2"] == pytest.approx(10703.36)
+    assert t["flash"]["energy_pj"] == pytest.approx(952.0)
+    assert t["in_memory"]["area_um2"] == pytest.approx(207.8)
+    assert t["in_memory"]["energy_pj"] == pytest.approx(74.23)
+
+
+def test_paper_headline_ratios():
+    """~25x less area than SAR, ~51x than Flash; ~1.4x / ~13x energy."""
+    assert 24 < area_um2("sar", 5) / area_um2("in_memory", 5) < 27
+    assert 49 < area_um2("flash", 5) / area_um2("in_memory", 5) < 53
+    assert 1.3 < energy_pj("sar", 5) / energy_pj("in_memory", 5) < 1.5
+    assert 12 < energy_pj("flash", 5) / energy_pj("in_memory", 5) < 14
+
+
+def test_flash_area_exponential_in_bits():
+    a = [area_um2("flash", b) for b in range(3, 9)]
+    ratios = [a[i + 1] / a[i] for i in range(len(a) - 1)]
+    assert all(1.8 < r < 2.3 for r in ratios)  # ~2x per bit
+
+
+def test_in_memory_area_flat_in_bits():
+    a3, a8 = area_um2("in_memory", 3), area_um2("in_memory", 8)
+    assert a8 / a3 < 1.3  # nearly flat (Fig. 7a)
+
+
+def test_latency_orderings():
+    """Fig. 7b: flash 1 cycle; SAR linear in bits; hybrid in between."""
+    for b in (4, 5, 6):
+        assert latency_cycles("flash", b) == 1
+        assert latency_cycles("sar", b) == b
+        assert 1 < latency_cycles("in_memory_hybrid", b) < b
+        assert latency_cycles("in_memory_asym", b) < latency_cycles("in_memory", b)
+
+
+def test_asym_energy_saving_proportional():
+    """Fig. 4c: 3.7/5 comparisons => ~26% energy saving."""
+    e_sym = energy_pj("in_memory", 5)
+    e_asym = energy_pj("in_memory_asym", 5)
+    assert 0.70 < e_asym / e_sym < 0.80
+
+
+def test_hybrid_saves_reference_energy():
+    e_plain = energy_pj("in_memory", 5)
+    e_hybrid = energy_pj("in_memory_hybrid", 5, flash_share=3)
+    assert e_hybrid < e_plain * 1.05  # shared flash refs amortize
+
+
+def test_voltage_scaling_quadratic():
+    e1 = energy_pj("in_memory", 5, vdd=1.0)
+    e2 = energy_pj("in_memory", 5, vdd=0.8)
+    assert e2 / e1 == pytest.approx(0.64, rel=1e-6)
+
+
+def test_design_space_complete():
+    ds = design_space()
+    for style in ADC_STYLES:
+        assert len(ds[style]["area_um2"]) == len(list(range(3, 9)))

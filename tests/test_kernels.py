@@ -1,0 +1,100 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.cim_matmul import adc_quant_pallas, cim_matmul_pallas
+from repro.kernels.ops import adc_quant_op, cim_matmul_op
+
+
+def _ints(shape, lo, hi, seed, dtype=jnp.float32):
+    x = jax.random.randint(jax.random.PRNGKey(seed), shape, lo, hi)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize(
+    "m,k,n,rows,block_k",
+    [
+        (128, 512, 128, 128, 512),
+        (128, 512, 128, 64, 256),
+        (256, 1024, 128, 128, 512),
+        (128, 256, 256, 16, 128),
+    ],
+)
+def test_fakequant_kernel_vs_ref(m, k, n, rows, block_k):
+    xi = _ints((m, k), -50, 50, 0)
+    wi = _ints((k, n), -50, 50, 1)
+    y_k = cim_matmul_pallas(
+        xi, wi, rows=rows, adc_bits=8, mode="fake_quant",
+        block_k=block_k, interpret=True,
+    )
+    y_r = ref.cim_matmul_ref(xi, wi, rows=rows, adc_bits=8, mode="fake_quant")
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("a_bits,w_bits,rows,adc_bits", [(4, 4, 128, 8), (3, 5, 64, 7), (4, 4, 16, 5)])
+def test_bitplane_kernel_vs_ref(a_bits, w_bits, rows, adc_bits):
+    m, k, n = 128, 512, 128
+    lo_a, hi_a = -(1 << (a_bits - 1)), (1 << (a_bits - 1))
+    lo_w, hi_w = -(1 << (w_bits - 1)), (1 << (w_bits - 1))
+    xi = _ints((m, k), lo_a, hi_a, 2, jnp.int32)
+    wi = _ints((k, n), lo_w, hi_w, 3, jnp.int32)
+    y_k = cim_matmul_pallas(
+        xi, wi, rows=rows, adc_bits=adc_bits, mode="bitplane",
+        a_bits=a_bits, w_bits=w_bits, interpret=True,
+    )
+    y_r = ref.cim_matmul_ref(
+        xi.astype(jnp.float32), wi.astype(jnp.float32),
+        rows=rows, adc_bits=adc_bits, mode="bitplane",
+        a_bits=a_bits, w_bits=w_bits,
+    )
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-6)
+
+
+def test_bitplane_kernel_exact_on_chip_geometry():
+    """rows=16 + 5-bit ADC: kernel output == plain integer matmul."""
+    xi = _ints((128, 512), -8, 8, 4, jnp.int32)
+    wi = _ints((512, 128), -8, 8, 5, jnp.int32)
+    y = cim_matmul_pallas(
+        xi, wi, rows=16, adc_bits=5, mode="bitplane", a_bits=4, w_bits=4,
+        block_k=512, interpret=True,
+    )
+    want = xi.astype(jnp.float32) @ wi.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(7, 130), (100, 100), (256, 512), (1, 31)])
+@pytest.mark.parametrize("bits", [3, 5, 8])
+def test_adc_quant_kernel_sweep(shape, bits):
+    v = jax.random.uniform(jax.random.PRNGKey(6), shape)
+    got = adc_quant_op(v, bits=bits)
+    want = ref.adc_quant_ref(v, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-7)
+
+
+@pytest.mark.parametrize(
+    "batch_shape,k,n", [((3, 70), 300, 50), ((5,), 64, 8), ((2, 3, 4), 128, 16)]
+)
+def test_wrapper_odd_shapes(batch_shape, k, n):
+    x = jax.random.normal(jax.random.PRNGKey(7), (*batch_shape, k))
+    w = jax.random.normal(jax.random.PRNGKey(8), (k, n))
+    y = cim_matmul_op(x, w, rows=64, adc_bits=10)
+    assert y.shape == (*batch_shape, n)
+    rel = float(jnp.abs(y - x @ w).max() / jnp.abs(x @ w).max())
+    assert rel < 0.15  # 10-bit ADC: small composite quantization error
+
+
+def test_wrapper_matches_core_fakequant_semantics():
+    """ops.cim_matmul_op == core.cim_linear fake_quant (ideal ADC)."""
+    from repro.core.cim_linear import CiMConfig, cim_matmul
+
+    x = jax.random.normal(jax.random.PRNGKey(9), (32, 192))
+    w = jax.random.normal(jax.random.PRNGKey(10), (192, 24))
+    y_kernel = cim_matmul_op(x, w, rows=64, adc_bits=6, block_m=128, block_n=128, block_k=64)
+    y_core = cim_matmul(
+        x, w, CiMConfig(mode="fake_quant", adc_bits=6, rows=64, ste=False)
+    )
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_core), rtol=1e-5, atol=1e-5)

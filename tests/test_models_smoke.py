@@ -1,0 +1,113 @@
+"""Per-assigned-architecture smoke tests: reduced config, one forward/train
+step on CPU, output shapes + no NaNs (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import build_model
+from repro.models import layers as L
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def _cache():
+    return {}
+
+
+def _build(name, _cache):
+    if name not in _cache:
+        cfg = reduced(ARCHS[name])
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _cache[name] = (cfg, model, params)
+    return _cache[name]
+
+
+def _inputs(cfg, b, s, seed=1):
+    if cfg.input_kind == "embeddings":
+        return jax.random.normal(jax.random.PRNGKey(seed), (b, s, cfg.d_model))
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0, cfg.vocab)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_and_train_step(name, _cache):
+    cfg, model, params = _build(name, _cache)
+    b, s = 2, 64
+    batch = {
+        "inputs": _inputs(cfg, b, s),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab),
+    }
+    h, aux = model.forward(params, batch["inputs"])
+    assert h.shape == (b, s, cfg.d_model)
+    assert bool(jnp.isfinite(h).all()), f"{name}: NaN in hidden states"
+
+    loss, mets = jax.jit(model.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{name}: non-finite loss"
+
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads)), (
+        f"{name}: non-finite grads"
+    )
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_consistency(name, _cache):
+    """prefill(x[:-1]) + decode(x[-1]) == forward(x) at the last position.
+
+    MoE archs use a drop-free capacity factor here: capacity-based token
+    dropping legitimately differs between a 127-token prefill and a 1-token
+    decode, so exact consistency only holds without drops."""
+    import dataclasses
+
+    from repro.models import build_model as _bm
+
+    cfg, model, params = _build(name, _cache)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)
+        model = _bm(cfg)
+    b, s = 2, 64
+    x = _inputs(cfg, b, s, seed=3)
+    cache = model.make_cache(b, s)
+    _, cache = model.prefill(params, x[:, : s - 1], cache)
+    last = x[:, s - 1]
+    ld, _ = model.decode_step(params, last, jnp.asarray(s - 1), cache)
+    h, _ = model.forward(params, x)
+    lfull = L.logits_step(params["embed"], h[:, -1:, :], cfg)
+    err = float(jnp.abs(ld - lfull).max())
+    tol = 5e-3 if ARCHS[name].n_experts else 1e-4
+    assert err < tol, f"{name}: decode/forward mismatch {err}"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_count_analytic_matches(name, _cache):
+    """configs.n_params() agrees with the actual reduced-param tree."""
+    cfg, model, params = _build(name, _cache)
+    actual = sum(x.size for x in jax.tree.leaves(params))
+    analytic = cfg.n_params()
+    # conv/dt/gating leaves make mamba counts approximate; dense exact-ish
+    assert abs(actual - analytic) / analytic < 0.35, (name, actual, analytic)
+
+
+def test_full_configs_match_reported_sizes():
+    expected = {
+        "llama3-405b": 405e9,
+        "command-r-plus-104b": 104e9,
+        "qwen2.5-32b": 32e9,
+        "qwen3-moe-30b-a3b": 30e9,
+        "pixtral-12b": 12e9,
+        "zamba2-7b": 7e9,
+        "mamba2-130m": 130e6,
+        "smollm-135m": 135e6,
+    }
+    for name, want in expected.items():
+        got = ARCHS[name].n_params()
+        assert abs(got - want) / want < 0.25, (name, got, want)
+
+
+def test_moe_active_params():
+    cfg = ARCHS["qwen3-moe-30b-a3b"]
+    assert abs(cfg.n_active_params() - 3.3e9) / 3.3e9 < 0.3

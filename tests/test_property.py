@@ -1,0 +1,130 @@
+"""Hypothesis property tests on the system's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import adc
+from repro.core import search_tree as st
+from repro.core.cim_array import bit_planes, from_bit_planes
+from repro.core.cim_linear import CiMConfig, cim_matmul, quantize_symmetric
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@given(
+    pmf=hst.lists(hst.floats(0.001, 1.0), min_size=2, max_size=32),
+)
+@_settings
+def test_any_pmf_yields_valid_optimal_tree(pmf):
+    p = np.asarray(pmf) / np.sum(pmf)
+    tree = st.optimal_tree(p)
+    st.validate_tree(tree)
+    e = tree.expected_depth(p)
+    n = len(p)
+    assert 1.0 - 1e-9 <= e <= np.ceil(np.log2(n)) + np.log2(n) + 1
+
+
+@given(
+    bits=hst.integers(2, 6),
+    seed=hst.integers(0, 2**30),
+)
+@_settings
+def test_conversion_error_bounded_by_one_lsb(bits, seed):
+    """Ideal-comparator conversion never deviates from floor quantization."""
+    v = jax.random.uniform(jax.random.PRNGKey(seed), (512,))
+    cfg = adc.ADCConfig(bits=bits, mode="sar", n_ref_columns=max(32, 1 << bits))
+    res = adc.convert(v, cfg)
+    ideal = adc.quantize_ideal(v, bits)
+    assert (res.codes == ideal).all()
+
+
+@given(
+    bits=hst.integers(2, 8),
+    signed=hst.booleans(),
+    seed=hst.integers(0, 2**30),
+)
+@_settings
+def test_bit_plane_roundtrip(bits, signed, seed):
+    lo = -(1 << (bits - 1)) if signed else 0
+    hi = (1 << (bits - 1)) if signed else (1 << bits)
+    x = jax.random.randint(jax.random.PRNGKey(seed), (64,), lo, hi)
+    planes = bit_planes(x, bits, signed)
+    back = from_bit_planes(planes, bits, signed)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@given(
+    m=hst.integers(1, 8),
+    k_tiles=hst.integers(1, 4),
+    n=hst.integers(1, 8),
+    seed=hst.integers(0, 2**30),
+)
+@_settings
+def test_cim_bitplane_exactness_property(m, k_tiles, n, seed):
+    """For any shape, 16-row arrays + 5-bit ADC == exact integer matmul."""
+    k = 16 * k_tiles
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    cfg = CiMConfig(mode="bitplane", a_bits=3, w_bits=3, adc_bits=5, rows=16, ste=False)
+    y = cim_matmul(x, w, cfg)
+    xi, sx = quantize_symmetric(x, 3, True)
+    wi, sw = quantize_symmetric(w, 3, True, per_axis=-1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray((xi @ wi) * sx * sw), rtol=1e-4, atol=1e-5)
+
+
+@given(
+    bits=hst.integers(2, 8),
+    signed=hst.booleans(),
+    seed=hst.integers(0, 2**30),
+)
+@_settings
+def test_quantize_symmetric_bounds(bits, signed, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * 10
+    xi, scale = quantize_symmetric(x, bits, signed)
+    qmax = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
+    lo = -qmax - 1 if signed else 0
+    assert float(xi.min()) >= lo and float(xi.max()) <= qmax
+    if signed:
+        # dequantized error bounded by scale/2 within representable range
+        err = jnp.abs(xi * scale - jnp.clip(x, lo * scale, qmax * scale))
+        assert float(err.max()) <= float(scale) * 0.5 + 1e-6
+
+
+@given(seed=hst.integers(0, 2**30))
+@_settings
+def test_grad_compression_error_feedback_unbiased(seed):
+    """Quantize with error feedback: accumulated estimate converges to mean."""
+    from repro.optim.grad_compression import dequantize_int8, quantize_int8
+
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (256,)))
+    e = np.zeros_like(g)
+    acc = np.zeros_like(g)
+    steps = 50
+    for _ in range(steps):
+        q, s = quantize_int8(jnp.asarray(g + e))
+        deq = np.asarray(dequantize_int8(q, s))
+        e = (g + e) - deq
+        acc += deq
+    np.testing.assert_allclose(acc / steps, g, atol=np.abs(g).max() / 120)
+
+
+@given(
+    rows=hst.sampled_from([8, 16, 32]),
+    p=hst.floats(0.05, 0.9),
+)
+@_settings
+def test_mav_pmf_properties(rows, p):
+    from repro.core.mav_stats import analytic_mav_pmf, code_pmf_from_mav
+
+    pmf = analytic_mav_pmf(rows, p)
+    assert pmf.shape == (rows + 1,)
+    assert pmf.sum() == pytest.approx(1.0, abs=1e-9)
+    cp = code_pmf_from_mav(pmf, rows, 5)
+    assert cp.sum() == pytest.approx(1.0, abs=1e-9)
+    # mean of code distribution tracks p
+    mean_code = (np.arange(32) * cp).sum() / 31.0
+    assert abs(mean_code - p) < 0.15

@@ -1,0 +1,30 @@
+"""Collaborative digitization schedules (paper Figs. 2, 3, 5c)."""
+
+from repro.core.schedule import hybrid_schedule, pair_sar_schedule, throughput_summary
+
+
+def test_pair_sar_timeline():
+    s = pair_sar_schedule(bits=5, n_conversions=4)
+    assert s.n_conversions == 4
+    assert s.n_arrays == 2
+    # each conversion: 1 compute + 5 ref/compare cycles
+    assert s.n_cycles == 4 * (1 + 5)
+    # both arrays alternate roles: each computes twice
+    computes = [sl for sl in s.slots if sl.role == "compute"]
+    assert {sl.array for sl in computes} == {"A", "B"}
+
+
+def test_hybrid_timeline_matches_fig3():
+    s = hybrid_schedule(bits=5, flash_bits=2, n_cim_arrays=3)
+    assert s.n_conversions == 3
+    assert s.n_arrays == 3 + 3  # 3 CiM + 3 reference arrays
+    # hybrid: parallel compute + staggered flash + parallel SAR tails
+    assert s.n_cycles <= 1 + 3 + (5 - 2) + 1
+
+
+def test_throughput_summary_gain():
+    t = throughput_summary()
+    # the paper's system-level claim: saved ADC area funds >10x more
+    # conversions per unit area even at interleaved (half) duty cycle
+    assert t["dedicated_adc_area_ratio"] > 24
+    assert t["conversions_per_area_gain"] > 10

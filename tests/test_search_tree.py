@@ -1,0 +1,76 @@
+"""Asymmetric search tree: optimality, structure, paper Fig. 4c claim."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import search_tree as st
+from repro.core.mav_stats import analytic_code_pmf, entropy_bits
+
+
+def brute_force_optimal(pmf):
+    """Exact optimal expected depth by enumerating alphabetic trees (tiny n)."""
+    n = len(pmf)
+
+    def best(lo, hi):
+        if lo == hi:
+            return 0.0
+        mass = sum(pmf[lo : hi + 1])
+        return min(best(lo, k - 1) + best(k, hi) for k in range(lo + 1, hi + 1)) + mass
+
+    return best(0, n - 1)
+
+
+@pytest.mark.parametrize("n", [2, 4, 5, 7, 8])
+def test_optimal_matches_bruteforce(n):
+    rng = np.random.default_rng(n)
+    pmf = rng.dirichlet(np.ones(n))
+    tree = st.optimal_tree(pmf)
+    st.validate_tree(tree)
+    got = tree.expected_depth(pmf)
+    want = brute_force_optimal(list(pmf))
+    assert got == pytest.approx(want, rel=1e-9)
+
+
+def test_symmetric_tree_depth():
+    for bits in (1, 2, 3, 5, 8):
+        tree = st.symmetric_tree(bits)
+        st.validate_tree(tree)
+        assert (tree.depth == bits).all()
+
+
+def test_paper_fig4c_claim():
+    """Skewed MAV (16 rows, p=0.25) => ~3.7 comparisons at 5 bits vs 5."""
+    pmf = analytic_code_pmf(rows=16, bits=5, p_discharge=0.25)
+    opt = st.optimal_tree(pmf)
+    sym = st.symmetric_tree(5)
+    e_opt = opt.expected_depth(pmf)
+    assert sym.expected_depth(pmf) == 5.0
+    assert 3.5 <= e_opt <= 3.9, f"paper claims ~3.7, got {e_opt:.3f}"
+
+
+def test_expected_depth_bounds():
+    """entropy <= E[depth] <= bits for any code distribution."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        pmf = rng.dirichlet(np.ones(32) * rng.uniform(0.1, 3))
+        tree = st.optimal_tree(pmf)
+        st.validate_tree(tree)
+        e = tree.expected_depth(pmf)
+        assert e <= 5.0 + 1e-9
+        assert e >= entropy_bits(pmf) - 1e-9 or e >= 1.0
+
+
+def test_weight_balanced_near_optimal():
+    pmf = analytic_code_pmf(rows=16, bits=5)
+    wb = st.weight_balanced_tree(pmf)
+    opt = st.optimal_tree(pmf)
+    st.validate_tree(wb)
+    assert wb.expected_depth(pmf) <= opt.expected_depth(pmf) + 0.5
+
+
+def test_uniform_pmf_recovers_symmetric_cost():
+    pmf = np.full(32, 1 / 32)
+    opt = st.optimal_tree(pmf)
+    assert opt.expected_depth(pmf) == pytest.approx(5.0, abs=1e-9)

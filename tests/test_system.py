@@ -1,0 +1,70 @@
+"""End-to-end system behaviour: the paper's MNIST-CiM pipeline + the
+framework integration of memory-immersed digitization."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.cim_linear import CiMConfig
+from repro.core.noise import AnalogEnv
+from repro.train.mnist_mlp import evaluate, train_mlp
+
+
+@pytest.fixture(scope="module")
+def trained():
+    params, acc = train_mlp(epochs=4)
+    return params, acc
+
+
+def test_float_accuracy(trained):
+    _, acc = trained
+    assert acc > 0.93, f"float MLP should exceed 93%, got {acc:.3f}"
+
+
+def test_cim_5bit_accuracy_close_to_float(trained):
+    """Paper's operating point: 16-row arrays, 5-bit in-memory SAR ADC."""
+    params, float_acc = trained
+    cim = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5,
+                    rows=16, a_signed=False, ste=False)
+    acc = evaluate(params, cim, n_eval=512)
+    assert acc > float_acc - 0.05, f"5-bit CiM dropped too much: {acc:.3f} vs {float_acc:.3f}"
+
+
+def test_asym_search_same_accuracy_fewer_comparisons(trained):
+    """Fig. 4: the asymmetric search must not change accuracy (same codes)."""
+    params, _ = trained
+    base = dict(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5,
+                rows=16, a_signed=False, ste=False)
+    acc_sym = evaluate(params, CiMConfig(search="sar", **base), n_eval=512)
+    acc_asym = evaluate(params, CiMConfig(search="sar_asym", **base), n_eval=512)
+    assert abs(acc_sym - acc_asym) < 1e-6
+
+
+def test_accuracy_degrades_at_high_frequency(trained):
+    """Fig. 7c: accuracy collapses when the clock outruns settling."""
+    params, _ = trained
+    cim = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5,
+                    rows=16, a_signed=False, ste=False)
+    acc_10mhz = evaluate(params, cim, env=AnalogEnv(freq_hz=10e6), n_eval=256)
+    acc_100mhz = evaluate(params, cim, env=AnalogEnv(freq_hz=100e6), n_eval=256)
+    assert acc_10mhz > acc_100mhz + 0.1
+
+
+def test_accuracy_degrades_at_low_voltage(trained):
+    """Fig. 7d: relative comparator noise grows as VDD drops."""
+    params, _ = trained
+    cim = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5,
+                    rows=16, a_signed=False, ste=False)
+    acc_1v = evaluate(params, cim, env=AnalogEnv(vdd=1.0), n_eval=256)
+    acc_p6v = evaluate(params, cim, env=AnalogEnv(vdd=0.55), n_eval=256)
+    assert acc_1v >= acc_p6v - 0.02
+
+
+def test_fake_quant_tracks_bitplane(trained):
+    """The fast surrogate stays within a few % of the faithful simulation."""
+    params, _ = trained
+    base = dict(a_bits=8, w_bits=8, adc_bits=8, rows=64, a_signed=False, ste=False)
+    acc_fast = evaluate(params, CiMConfig(mode="fake_quant", **base), n_eval=512)
+    acc_faithful = evaluate(params, CiMConfig(mode="bitplane", **base), n_eval=512)
+    assert abs(acc_fast - acc_faithful) < 0.06

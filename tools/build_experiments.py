@@ -1,0 +1,355 @@
+"""Assemble EXPERIMENTS.md from dry-run/hillclimb JSON + the narrative below.
+
+  PYTHONPATH=src python tools/build_experiments.py
+"""
+
+import json
+from pathlib import Path
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.roofline.report import collective_schedule, load, roofline_table  # noqa: E402
+
+ROOT = Path(__file__).parent.parent
+V3 = ROOT / "results/dryrun_v3"
+V3_OPT = ROOT / "results/dryrun_v3_opt"
+HC = ROOT / "results/hillclimb"
+
+
+def _hc(name):
+    f = HC / (name.replace("/", "__") + ".json")
+    if not f.exists():
+        return None
+    r = json.loads(f.read_text())
+    return r if r.get("status") == "ok" else None
+
+
+def _cell(dir_, arch, shape, mesh="singlepod"):
+    f = dir_ / f"{arch}__{shape}__{mesh}.json"
+    if not f.exists():
+        return None
+    r = json.loads(f.read_text())
+    return r if r.get("status") == "ok" else None
+
+
+def _terms(rec):
+    rf = rec["roofline"]
+    return rf["t_compute"], rf["t_memory"], rf["t_collective"]
+
+
+def fmt3(rec):
+    c, m, x = _terms(rec)
+    return f"c {c:.2f} / m {m:.2f} / x {x:.2f} s (max {max(c,m,x):.2f}s)"
+
+
+def main():
+    recs_single = load(V3, "singlepod")
+    recs_multi = load(V3, "multipod")
+    recs_opt = load(V3_OPT, "singlepod")
+    n_ok_s = sum(1 for r in recs_single if r.get("status") == "ok")
+    n_ok_m = sum(1 for r in recs_multi if r.get("status") == "ok")
+
+    # dry-run ledger
+    ledger_rows = []
+    for r in recs_single:
+        if r.get("status") != "ok":
+            continue
+        rm = _cell(V3, r["arch"], r["shape"], "multipod")
+        ledger_rows.append(
+            f"| {r['arch']} | {r['shape']} | ok ({r['compile_s']:.0f}s) | "
+            f"{'ok (%.0fs)' % rm['compile_s'] if rm else 'MISSING'} | "
+            f"{r['memory']['bytes']/2**30:.2f} | "
+            f"{(rm['memory']['bytes']/2**30 if rm else 0):.2f} | "
+            f"{len(r.get('fallbacks', []))} |"
+        )
+    ledger = (
+        "| arch | shape | single-pod 16×16 | multi-pod 2×16×16 | mem/dev GiB (1 pod) | mem/dev GiB (2 pods) | sharding fallbacks |\n"
+        "|---|---|---|---|---|---|---|\n" + "\n".join(ledger_rows)
+    )
+
+    # optimized-vs-baseline quick table for all train/prefill cells
+    opt_rows = []
+    for r in recs_opt:
+        if r.get("status") != "ok":
+            continue
+        base = _cell(V3, r["arch"], r["shape"])
+        if not base:
+            continue
+        bc, bm, bx = _terms(base)
+        oc, om, ox = _terms(r)
+        gain = max(bc, bm, bx) / max(max(oc, om, ox), 1e-12)
+        opt_rows.append(
+            f"| {r['arch']} | {r['shape']} | {max(bc,bm,bx):.2f}s | {max(oc,om,ox):.2f}s | {gain:.2f}× |"
+        )
+    opt_table = (
+        "| arch | shape | baseline max-term | optimized max-term | gain |\n"
+        "|---|---|---|---|---|\n" + "\n".join(opt_rows)
+    )
+
+    # hillclimb cells
+    hc_lines = []
+    cells = {
+        "A — llama3-405b × train_4k (worst fraction, memory-bound)": [
+            ("baseline (paper-faithful impl)", _cell(V3, "llama3-405b", "train_4k")),
+            ("A1c+A2+A3 optimized", _hc("A_llama405b_train/opt_mixed_precision")),
+            ("…+ attn_chunk 512 (A4, refuted)", _hc("A_llama405b_train/opt_chunk512")),
+        ],
+        "B — qwen3-moe-30b-a3b × train_4k (most collective-bound)": [
+            ("baseline (GShard scatter dispatch)", _cell(V3, "qwen3-moe-30b-a3b", "train_4k")),
+            ("B1 dense-masked MoE", _hc("B_qwen3moe_train/opt_dense_moe")),
+            ("B1 on moonshot (runner-up)", _hc("B_moonshot_train/opt_dense_moe")),
+            ("moonshot baseline", _cell(V3, "moonshot-v1-16b-a3b", "train_4k")),
+        ],
+        "C — command-r-plus-104b × decode_32k (paper-representative serving)": [
+            ("baseline (bf16 serving)", _cell(V3, "command-r-plus-104b", "decode_32k")),
+            ("C1 int8 weight/act dots", _hc("C_commandr_decode/opt_int8_weights")),
+            ("C2 + int8 KV cache", _hc("C_commandr_decode/opt_int8_weights_kv")),
+            ("C2b int8 KV only (ablation)", _hc("C_commandr_decode/opt_int8_kv_only")),
+        ],
+    }
+    for title, rows in cells.items():
+        hc_lines.append(f"\n**{title}**\n")
+        hc_lines.append("| variant | compute | memory | collective | max term | mem/dev |")
+        hc_lines.append("|---|---|---|---|---|---|")
+        for name, rec in rows:
+            if rec is None:
+                hc_lines.append(f"| {name} | (missing) | | | | |")
+                continue
+            c, m, x = _terms(rec)
+            hc_lines.append(
+                f"| {name} | {c:.2f}s | {m:.2f}s | {x:.2f}s | **{max(c,m,x):.2f}s** | "
+                f"{rec['memory']['bytes']/2**30:.2f} GiB |"
+            )
+    hc_table = "\n".join(hc_lines)
+
+    picks = [
+        ("llama3-405b", "train_4k"),
+        ("qwen3-moe-30b-a3b", "train_4k"),
+        ("command-r-plus-104b", "decode_32k"),
+        ("qwen2.5-32b", "prefill_32k"),
+        ("zamba2-7b", "long_500k"),
+        ("mamba2-130m", "train_4k"),
+    ]
+    text = TEMPLATE.format(
+        n_ok_s=n_ok_s,
+        n_ok_m=n_ok_m,
+        ledger=ledger,
+        baseline_table=roofline_table(recs_single),
+        optimized_table=opt_table,
+        hillclimb=hc_table,
+        coll_schedule=collective_schedule(recs_single, picks),
+    )
+    (ROOT / "EXPERIMENTS.md").write_text(text)
+    print(f"EXPERIMENTS.md written ({n_ok_s} single-pod, {n_ok_m} multi-pod cells ok)")
+
+
+TEMPLATE = """# EXPERIMENTS
+
+Reproduction + performance report for *Memory-Immersed Collaborative
+Digitization for Area-Efficient CiM Deep Learning* as a multi-pod JAX
+framework. Hardware target: TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI per chip); this container is CPU-only, so §Roofline terms
+are derived from the compiled SPMD artifacts, not wall clocks.
+
+## §Paper — reproduction of the paper's own claims
+
+From `PYTHONPATH=src python -m benchmarks.run` (bench_output.txt):
+
+| claim | paper | ours |
+|---|---|---|
+| in-memory ADC area vs 40nm SAR | ~25× smaller | 25.2× (207.8 µm² vs 5235.2) |
+| vs 40nm Flash | ~51× smaller | 51.5× |
+| energy vs SAR | ~1.4× lower | 1.41× (74.23 pJ vs 105) |
+| energy vs Flash | ~13× lower | 12.8× |
+| asymmetric search, 5-bit (Fig. 4c) | ~3.7 comparisons | 3.711 analytic / 3.709 measured (100k conversions) |
+| DNL / INL (Fig. 6) | < 0.5 LSB | max 0.031 / 0.072 LSB @1% cap mismatch (8-seed MC) |
+| MNIST accuracy at nominal point (Fig. 7c,d) | high, stable | 0.948 float → 0.895 CiM 4b/5b ADC (clean & 10 MHz) |
+| accuracy collapse at high clock (Fig. 7c) | degrades | 0.895 → 0.11 @100 MHz (settling-noise model) |
+| mild degradation at low VDD (Fig. 7d) | degrades slowly | 0.887 @0.55 V |
+| hybrid Flash+SAR latency (Fig. 3/7b) | 1 + (B−f) cycles | exact (tests/test_adc.py) |
+
+The asymmetric-search tree is the *exact optimal alphabetic tree* (Knuth DP),
+validated against brute force; all ADC modes produce bit-identical codes to
+the ideal quantizer under zero noise (tests).
+
+## §Dry-run — 512-chip multi-pod compile ledger
+
+Meshes: single-pod `(16,16)=(data,model)` = 256 chips; multi-pod
+`(2,16,16)=(pod,data,model)` = 512 chips (pod axis shards batch + FSDP).
+Every valid (arch × shape) cell lowers AND compiles on BOTH meshes:
+**{n_ok_s}/32 single-pod ok, {n_ok_m}/32 multi-pod ok** (reproduce:
+`python -m repro.launch.dryrun --all --both-meshes`).
+
+Cell count: 10 archs × 4 shapes = 40 nominal; 8 `long_500k` cells are
+N/A-by-assignment for pure full-attention archs (DESIGN.md §7) → 32 valid
+cells, all green. `train_4k` lowers `train_step` (fwd+bwd+optimizer);
+`prefill_32k` lowers `prefill`; `decode_32k`/`long_500k` lower one
+`serve_step` token against a seq_len KV/state cache.
+
+Sharding fallback column = dims that fell back to replication
+(divisibility-aware rules, e.g. kv_heads=8 on a 16-way model axis — the KV
+*sequence* dim takes the model axis instead: flash-decoding-style SP).
+
+{ledger}
+
+## §Roofline — methodology
+
+Terms per device (per assignment):
+  * compute = dot_FLOPs / 197e12;  memory = HLO_bytes / 819e9;
+    collective = wire_bytes / 50e9.
+  * **Measurement apparatus matters.** XLA's `cost_analysis()` counts
+    while-loop bodies ONCE (verified experimentally — a 2-layer and 8-layer
+    scanned model report identical flops), so all three numerators are
+    re-derived from the optimized post-SPMD HLO text with loop trip-count
+    multiplication (`roofline/hlo_stats.py`): dot FLOPs (MXU term;
+    elementwise excluded), fusion-granularity operand+result bytes with TPU
+    in-place aliasing modeled for scan stack/slice patterns, and
+    bandwidth-optimal-ring wire bytes per collective
+    (AG (D−1)/D·buf, AR 2(D−1)/D·buf, RS (D−1)/D·full, A2A (D−1)/D·buf,
+    permute 1×buf; D = replica-group size parsed per op).
+  * `MODEL/HLO flops` = 6·N_active·tokens (train) or 2·N_active·tokens
+    (serve) over total HLO dot flops — the useful-compute ratio (catches
+    remat/replication waste; attention flops make it <1 by construction).
+  * `roofline frac` = (useful-FLOPs time) / (binding-term time): the §Perf
+    score. Decode cells are intrinsically ≪1 (one token per step against the
+    whole weight/cache read) — for them the memory term itself is the score.
+
+### Baseline table (paper-faithful implementation, single-pod, all 32 cells)
+
+{baseline_table}
+
+### Collective schedule (per-device op executions × wire bytes per step,
+representative cells; full data in results/dryrun_v3/*.json)
+
+{coll_schedule}
+
+Reading the table:
+  * **Dense-LM train/prefill cells are memory-term bound** in this
+    implementation — dominated by (a) f32 materialization of norm/attention
+    internals and (b) attention score tiles round-tripping HBM; both are
+    implementation artifacts the §Perf iterations attack, not physics.
+  * **MoE cells are collective-bound**: the GShard scatter dispatch makes
+    XLA all-gather the global token buffer per layer (2.9–6.9 TB/device/step
+    wire). Iteration B1 eliminates this.
+  * **Decode cells are memory-bound by weight+cache reads** — exactly the
+    regime the paper's low-precision digitization addresses (iteration C).
+  * SSM cells (mamba2, zamba2 long_500k) have tiny absolute terms: O(1)
+    state decode — the sub-quadratic claim shows up as µs-scale terms.
+  * llama3-405b fits: 5.91 GiB/device train (Adafactor states; Adam would
+    need 12.7 GiB of m/v alone), 13.79 GiB decode_32k (B=128 KV cache)
+    against the 16 GiB v5e HBM.
+
+## §Perf — hypothesis → change → measure log (3 hillclimbed cells)
+
+Cells chosen per assignment: **A** llama3-405b×train_4k (worst roofline
+fraction among big-model train cells, memory-bound), **B**
+qwen3-moe-30b-a3b×train_4k (most collective-bound), **C**
+command-r-plus-104b×decode_32k (most representative of the paper's technique
+— low-precision product-sum digitization applied to serving).
+
+{hillclimb}
+
+### Iteration log (chronological)
+
+All before/after numbers below are apples-to-apples under the FINAL
+measurement apparatus (parser v4: loop-aware + in-place/slice aliasing);
+intermediate parser versions during the loop are noted where they changed a
+conclusion. Baseline = `REPRO_LEGACY_NORM=1` + scatter MoE + bf16 serving.
+
+* **A0 (apparatus)** — *Hypothesis*: llama's 816 s memory term (parser v1)
+  is implementation traffic. *Finding*: ~45% was measurement error — scan
+  stacking (`dynamic-update-slice` fusions) charged the full (L,B,S,D)
+  buffer per layer where a TPU aliases in place, and slice READS of stacked
+  remat residuals charged the whole stack. Parser v4 models both; llama
+  baseline settles at 370.7 s. A refuted-then-fixed measurement is recorded
+  because every later decision depends on it.
+* **A1 (REFUTED)** — *Hypothesis*: the remaining f32[B,S,D] fusion results
+  (several per layer) come from autodiff through the f32-upcast RMSNorm; a
+  custom-VJP norm keeping tensors in bf16 should cut the memory term ~2×.
+  *Change*: hand-fused VJP. *Measure*: memory term went UP ~55% (pre-v4
+  parser: 625 → 966 s). *Lesson*: custom_vjp residuals are opaque to the
+  scan-level remat — XLA saved (x, scale, inv) per layer instead of
+  rematerializing, costing more than the f32 copies. Debugged forward (kept
+  the intent, changed the mechanism) rather than reverting.
+* **A1c (CONFIRMED)** — *Hypothesis*: the same effect is achievable inside
+  autodiff if the stats reduction's backward stays in bf16: variance as a
+  self-dot with f32 *output* but bf16 operands (the dot transpose emits bf16
+  cotangents). *Change*: `var = einsum('...d,...d->...', x, x, f32)/D`.
+* **A2 (CONFIRMED)** — attention scores/probabilities materialize in the
+  compute dtype (bf16), online-softmax m/l/acc stay f32.
+* **A3 (CONFIRMED)** — `jax.checkpoint` on the per-KV-chunk attention step:
+  backward recomputes score tiles instead of saving the
+  (n_chunks,B,S,KV,G,chunk) f32 stack (flash-attention memory behavior in
+  pure XLA). **A1c+A2+A3 combined: memory term 370.7 → 317.5 s (−14%),
+  roofline fraction 0.137 → 0.160.**
+* **A4 (REFUTED)** — *Hypothesis*: halving attn_chunk (1024→512) reduces
+  live score bytes. *Measure*: 317.5 → 328.0 s (+3%; same totals, more
+  chunk-boundary traffic). Dropped.
+* **B1 (CONFIRMED)** — *Hypothesis*: the scatter dispatch forces XLA to
+  all-gather the global (1M, 2048) token buffer per MoE layer
+  (≈6.9 TB/device/step wire); computing each device's LOCAL experts on its
+  LOCAL tokens with a routing-weight mask trades ~2× expert FLOPs
+  (per-expert FFN is only 768 wide) for ZERO dispatch traffic. Napkin:
+  collective 278 s → psum-only ≈ 10 s; compute 2.8 → ~5 s. *Measure*:
+  **collective 277.9 → 9.6 s (29×), max-term 277.9 → 17.0 s (16.3×)**;
+  same change on moonshot-v1-16b-a3b: max-term 211.5 → 13.0 s (16.3×).
+* **C1 (WEAKLY CONFIRMED)** — int8 weight/activation dots (s8×s8→s32 MXU —
+  the paper's integer product-sums on the MXU): memory term 2.22 → 2.15 s.
+  *Lesson*: at B=128 × 32k context, decode traffic is CACHE-dominated, not
+  weight-dominated — the napkin missed that the (8, 32768, 8, 128)/layer
+  score reads dwarf the TP-sharded weight reads.
+* **C2 (CONFIRMED)** — int8 KV cache with per-(layer, kv-head) scales and
+  integer score/PV dots: **memory term 2.22 → 0.57 s (3.9×), resident
+  5.54 → 3.54 GiB/device**; KV-only ablation gives 0.64 s (the weight-int8
+  part adds the last ~10% and removes the f32 all-gathers: collective
+  0.49 → 0.14 s). Decode softmax deviation vs bf16 ≤ 5e-5; accuracy impact
+  on the MNIST-CiM pipeline nil (tests).
+* **D (IMPLEMENTED; measurement blocked by the container)** — fused causal
+  flash-attention Pallas kernel (kernels/flash_attention.py): VMEM-resident
+  online softmax, GQA head mapping, causal KV-block SKIPPING via a dynamic
+  loop bound, absolute-position input so a q-SEQUENCE-sharded shard_map
+  (batch over dp, S/tp query rows per model rank) masks exactly. Wired into
+  the prefill path (`attn_impl="flash"`), oracle-validated to 5e-7
+  (tests/test_flash_attention.py), and the full command-r-plus-104b
+  prefill_32k cell COMPILES under the 512-device mesh in 3 s. The dry-run
+  *byte* measurement is not comparable on this container: Pallas interpret
+  mode re-fetches the (1,1,32768,128) K/V block from "HBM" on every grid
+  step, where the TPU BlockSpec pipeline fetches it once per (batch, head) —
+  an emulation artifact the HLO-based model cannot see through. Analytic
+  projection: per layer the blocked path round-trips ~O(B·S²·h/chunk)
+  score-tile bytes while flash reads q+K+V+o once — the dominant prefill
+  memory contributor drops out entirely; left opt-in pending real-TPU
+  measurement.
+* **Stopping**: three consecutive <5% candidates on cell A (A4, chunk=2048,
+  f32→bf16 loss-chunk width) hit the stop rule; the remaining A-cell memory
+  term is genuine weight/activation traffic (FSDP re-gathers + remat
+  recompute) whose next lever — the fused causal
+  flash-attention Pallas kernel (kernels/flash_attention.py, implemented and
+  oracle-validated incl. causal block SKIPPING; VMEM-resident score tiles)
+  wired through shard_map, plus int8 training params — is staged next. B and
+  C reached parity with their napkin floors.
+
+### Optimized implementation — full single-pod re-sweep
+
+The A/B/C winners are now the framework defaults (B1's dense MoE and C's
+int8 serving stay config-gated: `moe_impl="dense"`, `kv_quant_int8`,
+`CiMConfig(mode="int8_dot")`). Re-sweeping ALL cells with the optimized
+implementation (paper-faithful baseline left column for comparison):
+
+{optimized_table}
+
+### Beyond-paper summary
+
+The paper's floor (faithful CiM + memory-immersed ADC behavioral stack,
+validated against every paper claim above) is separated from the beyond-paper
+ceiling: mixed-precision materialization discipline (A1c/A2/A3), dispatch-free
+MoE (B1), and int8 end-to-end serving (C1/C2) — the latter being the paper's
+own insight (cheap low-precision digitization of product-sums) transplanted
+to the MXU's native int8 path.
+"""
+
+
+if __name__ == "__main__":
+    main()
