@@ -1,0 +1,127 @@
+"""Fabric design-space sweep: networking mode x precision x chip budget.
+
+Emits one JSON record per design point — chip area, digitization area,
+conversions/cycle, throughput/mm^2, energy/conversion, and the iso-area
+ratios against the conventional-ADC baseline — so successive PRs can track
+the chip-level trajectory. Doubles as the ``fabric`` entry of
+``benchmarks/run.py`` and the <30 s smoke benchmark of ``tools/ci_check.py``.
+
+  PYTHONPATH=src python -m benchmarks.fabric_sweep [--out BENCH_fabric.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def sweep_points(
+    modes=("pair_sar", "hybrid", "flash"),
+    bit_range=(4, 5, 6),
+    array_budgets=(128, 256),  # >= one flash group even at 6 bits (3+63)
+) -> list[dict]:
+    from repro.core.energy_area import energy_pj
+    from repro.fabric.pipeline import fabric_throughput, iso_area_comparison
+    from repro.fabric.topology import FabricConfig
+
+    points = []
+    for mode in modes:
+        for bits in bit_range:
+            flash_bits = min(2, bits - 1)
+            for n_arrays in array_budgets:
+                fb = FabricConfig(
+                    mode=mode, adc_bits=bits, flash_bits=flash_bits, n_arrays=n_arrays
+                )
+                tp = fabric_throughput(fb)
+                iso = iso_area_comparison(fb)
+                points.append(
+                    {
+                        "mode": mode,
+                        "adc_bits": bits,
+                        "n_arrays": fb.resolved_n_arrays(),
+                        "chip_area_mm2": fb.chip_area_um2() / 1e6,
+                        "chip_adc_area_mm2": fb.chip_adc_area_um2() / 1e6,
+                        "conversions_per_cycle": tp["chip_conversions_per_cycle"],
+                        "throughput_per_mm2": tp["throughput_per_mm2"],
+                        "energy_pj_per_conversion": energy_pj(
+                            fb.adc_style,
+                            bits,
+                            flash_bits=flash_bits,
+                            flash_share=fb.n_cim_per_group,
+                        ),
+                        "adc_area_ratio": iso["adc_area_ratio"],
+                        "iso_area_throughput_ratio": iso["throughput_ratio"],
+                    }
+                )
+    return points
+
+
+def fabric_mapping_smoke() -> dict:
+    """Map a smollm block on a hybrid fabric — the perf-trajectory anchor."""
+    from repro.configs.registry import get_config
+    from repro.fabric.mapper import map_model
+    from repro.fabric.report import fabric_report
+    from repro.fabric.topology import FabricConfig
+
+    fb = FabricConfig(mode="hybrid", n_arrays=252)
+    t0 = time.perf_counter()
+    placements = map_model(get_config("smollm-135m"), fb, tokens=4, block_only=True)
+    report = fabric_report(placements, fb)
+    wall = time.perf_counter() - t0
+    return {
+        "map_report_s": wall,
+        "tiles": report["totals"]["tiles"],
+        "conversions": report["totals"]["conversions"],
+        "latency_s": report["totals"]["latency_s"],
+        "adc_area_ratio_vs_sar": report["paper_ratios"]["adc_area_ratio_vs_sar"],
+        "adc_area_ratio_vs_flash": report["paper_ratios"]["adc_area_ratio_vs_flash"],
+        "iso_area_throughput_ratio": report["iso_area"]["throughput_ratio"],
+    }
+
+
+def fabric_bench() -> list[tuple]:
+    """benchmarks/run.py rows: name, us_per_call, derived."""
+    rows = []
+    t0 = time.perf_counter()
+    points = sweep_points()
+    us = (time.perf_counter() - t0) / max(len(points), 1) * 1e6
+    for p in points:
+        rows.append(
+            (
+                f"fabric/{p['mode']}_b{p['adc_bits']}_a{p['n_arrays']}",
+                us,
+                f"conv_per_cyc={p['conversions_per_cycle']:.2f};"
+                f"per_mm2={p['throughput_per_mm2']:.1f};"
+                f"iso_ratio={p['iso_area_throughput_ratio']:.2f}",
+            )
+        )
+    smoke = fabric_mapping_smoke()
+    rows.append(
+        (
+            "fabric/map_smollm_block_hybrid252",
+            smoke["map_report_s"] * 1e6,
+            f"tiles={smoke['tiles']};iso_ratio={smoke['iso_area_throughput_ratio']:.2f}",
+        )
+    )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_fabric.json")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    payload = {
+        "sweep": sweep_points(),
+        "smoke": fabric_mapping_smoke(),
+    }
+    payload["wall_s"] = time.perf_counter() - t0
+    Path(args.out).write_text(json.dumps(payload, indent=2, default=float))
+    print(f"[fabric_sweep] {len(payload['sweep'])} design points -> {args.out} "
+          f"({payload['wall_s']:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ def main() -> None:
     ap.add_argument("--skip-slow", action="store_true", help="skip MNIST training bench")
     args = ap.parse_args()
 
-    from benchmarks import framework, paper_figs
+    from benchmarks import fabric_sweep, framework, paper_figs
 
     benches = [
         ("table1", paper_figs.table1_adc_area_energy),
@@ -24,6 +24,7 @@ def main() -> None:
         ("fig6", paper_figs.fig6_nonlinearity),
         ("fig7ab", paper_figs.fig7_design_space),
         ("fig3", paper_figs.fig3_hybrid_schedule),
+        ("fabric", fabric_sweep.fabric_bench),
         ("kernels", framework.bench_cim_kernels),
         ("train", framework.bench_train_step),
         ("serve", framework.bench_serve),

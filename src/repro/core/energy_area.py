@@ -46,7 +46,14 @@ _AREA_ANCHOR = {"sar": 5235.20, "flash": 10703.36, "in_memory": 207.8}
 _ENERGY_ANCHOR = {"sar": 105.0, "flash": 952.0, "in_memory": 74.23}
 _TECH = {"sar": "40nm", "flash": "40nm", "in_memory": "65nm"}
 
-ADC_STYLES = ("sar", "flash", "in_memory", "in_memory_hybrid", "in_memory_asym")
+ADC_STYLES = (
+    "sar",
+    "flash",
+    "in_memory",
+    "in_memory_hybrid",
+    "in_memory_asym",
+    "in_memory_flash",
+)
 
 
 def _style_base(style: str) -> str:
@@ -83,6 +90,8 @@ def latency_cycles(
         return float(bits)
     if style == "in_memory":
         return float(bits)  # SAR-mode memory-immersed
+    if style == "in_memory_flash":
+        return 1.0  # one-to-many coupling: all references in parallel
     if style == "in_memory_hybrid":
         return 1.0 + (bits - flash_bits)
     if style == "in_memory_asym":
@@ -128,6 +137,11 @@ def energy_pj(
     if style == "in_memory_asym":
         cyc = latency_cycles(style, bits, pmf=pmf, rows=rows)
         return cyc * (e_cmp + e_ref) * v2
+    if style == "in_memory_flash":
+        # one comparison cycle; 2^B - 1 neighbor-array references precharged
+        # in parallel, shared among `flash_share` compute arrays per bank
+        n_ref = 2.0**bits - 1.0
+        return n_ref * (e_cmp + e_ref / flash_share) * v2
     if style == "in_memory_hybrid":
         n_flash_ref = 2.0**flash_bits - 1.0
         # flash phase: n_flash_ref refs shared across `flash_share` arrays,

@@ -1,0 +1,54 @@
+"""Chip-level collaborative CiM fabric (paper Figs. 1-3, 5c, Table I).
+
+The paper's headline claim is system-level: memory-immersed digitization
+shrinks the per-array ADC ~25x (vs SAR) / ~51x (vs Flash), so many more CiM
+arrays fit in the same chip footprint — recovering the halved per-array
+throughput of collaborative digitization and cutting external memory
+accesses because more weights stay resident. This package models that chip:
+
+  * :mod:`repro.fabric.topology` — ``FabricConfig``: a grid of CiM arrays
+    wired as one of the paper's networking configurations (``pair_sar`` /
+    ``flash`` / ``hybrid``) or a conventional dedicated-ADC baseline; array
+    counts can be derived from an area budget via ``core.energy_area``.
+  * :mod:`repro.fabric.mapper` — tile an arbitrary matmul (or a whole
+    ``ModelConfig``) onto the fabric: K split across arrays at ``rows``
+    boundaries, N across array columns, M across time; yields a placement
+    plus weight-load (external-memory-access) counts.
+  * :mod:`repro.fabric.pipeline` — cycle-pipelined multi-conversion schedule
+    over N arrays (role swapping, shared flash-bank arbitration) extending
+    ``core.schedule``; chip throughput / utilization and the iso-area
+    throughput-recovery comparison.
+  * :mod:`repro.fabric.execute` — batched numerical execution of a mapped
+    placement through the ``core.cim_linear`` machinery; a mapped layer
+    matches the unmapped op bit-for-bit (noiseless ADC).
+  * :mod:`repro.fabric.report` — per-layer and end-to-end
+    area / energy / latency / EMA rollups, rendered like
+    ``roofline.report``.
+
+Paper-figure correspondence: Fig. 1 (networking configurations) ->
+``FabricConfig.mode``; Fig. 2 (pair SAR role swap) -> ``pair_sar`` groups;
+Fig. 3 + 5c (hybrid shared flash bank) -> ``hybrid`` groups and the
+pipeline's bank arbitration; Table I anchors the area/energy rollups.
+"""
+
+from repro.fabric.execute import execute_linear, execute_matmul
+from repro.fabric.mapper import LayerPlacement, map_matmul, map_model, model_matmuls
+from repro.fabric.pipeline import fabric_throughput, iso_area_comparison, pipelined_schedule
+from repro.fabric.report import fabric_report, render_markdown
+from repro.fabric.topology import FabricConfig, arrays_for_area
+
+__all__ = [
+    "FabricConfig",
+    "arrays_for_area",
+    "LayerPlacement",
+    "map_matmul",
+    "map_model",
+    "model_matmuls",
+    "fabric_throughput",
+    "iso_area_comparison",
+    "pipelined_schedule",
+    "execute_matmul",
+    "execute_linear",
+    "fabric_report",
+    "render_markdown",
+]

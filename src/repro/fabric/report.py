@@ -1,0 +1,178 @@
+"""Per-layer and end-to-end fabric rollups (area / energy / latency / EMA).
+
+Rendered alongside ``roofline.report``'s tables: one row per mapped layer,
+then chip-level totals and the paper's headline chip-level ratios —
+digitization area vs the dedicated 40 nm SAR (~25x) and Flash (~51x) ADCs
+(Table I), and the iso-area throughput comparison against a conventional-ADC
+fabric of equal footprint.
+
+  PYTHONPATH=src python -m repro.fabric.report --arch smollm-135m --mode hybrid
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import List, Optional
+
+from repro.core.energy_area import area_um2, energy_pj
+from repro.fabric.mapper import LayerPlacement
+from repro.fabric.pipeline import fabric_throughput, iso_area_comparison
+from repro.fabric.topology import EMA_PJ_PER_BIT, FabricConfig
+
+__all__ = ["fabric_report", "render_markdown"]
+
+
+def _layer_row(
+    p: LayerPlacement,
+    fabric: FabricConfig,
+    rate_per_compute: float,
+    model_resident: bool,
+) -> dict:
+    cycles = p.conversions_per_array_max / rate_per_compute
+    e_conv = energy_pj(
+        fabric.adc_style,
+        fabric.adc_bits,
+        vdd=fabric.vdd,
+        flash_bits=fabric.flash_bits,
+        flash_share=fabric.n_cim_per_group,
+    )
+    # steady-state EMA per forward pass: activations always stream; weights
+    # re-fetch unless the WHOLE model stays resident — a layer that fits by
+    # itself is still evicted when later layers overwrite its arrays
+    ema_bits = p.activation_bits + (0 if model_resident else p.weight_load_bits)
+    return {
+        **p.stats(),
+        "latency_cycles": cycles,
+        "latency_s": cycles / fabric.freq_hz,
+        "digitization_energy_pj": p.conversions * e_conv,
+        "ema_bits_per_pass": ema_bits,
+        "ema_energy_pj": ema_bits * EMA_PJ_PER_BIT,
+    }
+
+
+def fabric_report(
+    placements: List[LayerPlacement],
+    fabric: FabricConfig,
+    n_conversions: int = 96,
+) -> dict:
+    """Roll a list of layer placements up into the chip-level report."""
+    tp = fabric_throughput(fabric, n_conversions)
+    rate_per_compute = (
+        tp["group_conversions_per_cycle"] / fabric.compute_arrays_per_group
+    )
+    total_tiles = sum(p.n_weight_tiles for p in placements)
+    model_resident = total_tiles <= fabric.n_compute_arrays
+    layers = [
+        _layer_row(p, fabric, rate_per_compute, model_resident) for p in placements
+    ]
+    totals = {
+        "tiles": total_tiles,
+        "model_resident": model_resident,
+        "conversions": sum(r["conversions"] for r in layers),
+        "latency_cycles": sum(r["latency_cycles"] for r in layers),
+        "latency_s": sum(r["latency_s"] for r in layers),
+        "digitization_energy_pj": sum(r["digitization_energy_pj"] for r in layers),
+        "ema_bits_per_pass": sum(r["ema_bits_per_pass"] for r in layers),
+        "ema_energy_pj": sum(r["ema_energy_pj"] for r in layers),
+        "weight_program_bits": sum(r["weight_load_bits"] for r in layers),
+    }
+    chip = {
+        "mode": fabric.mode,
+        "n_arrays": fabric.resolved_n_arrays(),
+        "n_compute_arrays": fabric.n_compute_arrays,
+        "chip_area_mm2": fabric.chip_area_um2() / 1e6,
+        "chip_adc_area_mm2": fabric.chip_adc_area_um2() / 1e6,
+        "weight_capacity_bits": fabric.weight_capacity_bits(),
+        **tp,
+    }
+    report = {"chip": chip, "layers": layers, "totals": totals}
+    if not fabric.mode.startswith("conventional"):
+        n_arr = fabric.resolved_n_arrays()
+        report["paper_ratios"] = {
+            # chip-level digitization-area ratios vs dedicated 40nm ADCs
+            "adc_area_ratio_vs_sar": (n_arr * area_um2("sar", fabric.adc_bits))
+            / fabric.chip_adc_area_um2(),
+            "adc_area_ratio_vs_flash": (n_arr * area_um2("flash", fabric.adc_bits))
+            / fabric.chip_adc_area_um2(),
+        }
+        report["iso_area"] = iso_area_comparison(fabric, n_conversions)
+    return report
+
+
+def render_markdown(report: dict, max_layers: Optional[int] = 24) -> str:
+    """Markdown tables in the roofline.report house style."""
+    chip = report["chip"]
+    out = [
+        f"### fabric: {chip['mode']} — {chip['n_arrays']} arrays "
+        f"({chip['n_compute_arrays']} compute), {chip['chip_area_mm2']:.3f} mm^2 "
+        f"(ADC {chip['chip_adc_area_mm2']:.4f} mm^2), "
+        f"{chip['chip_conversions_per_s']:.3g} conv/s",
+        "",
+        "| layer | MxKxN | tiles | rounds | resident | conv | lat (cyc) | "
+        "E_dig (pJ) | EMA/pass (bits) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    layers = report["layers"]
+    shown = layers if max_layers is None else layers[:max_layers]
+    for r in shown:
+        out.append(
+            f"| {r['layer']} | {r['m']}x{r['k']}x{r['n']} | {r['tiles']} | "
+            f"{r['rounds']} | {'y' if r['resident'] else 'n'} | {r['conversions']:.3g} | "
+            f"{r['latency_cycles']:.3g} | {r['digitization_energy_pj']:.3g} | "
+            f"{r['ema_bits_per_pass']:.3g} |"
+        )
+    if max_layers is not None and len(layers) > max_layers:
+        out.append(f"| ... {len(layers) - max_layers} more layers ... | | | | | | | | |")
+    t = report["totals"]
+    out += [
+        "",
+        f"**totals:** {t['tiles']} tiles "
+        f"({'model-resident' if t['model_resident'] else 'rounds needed'}), "
+        f"{t['conversions']:.3g} conversions, {t['latency_s']*1e3:.3g} ms, "
+        f"{t['digitization_energy_pj']/1e6:.3g} uJ digitization, "
+        f"{t['ema_energy_pj']/1e6:.3g} uJ external-memory",
+    ]
+    if "paper_ratios" in report:
+        pr = report["paper_ratios"]
+        iso = report["iso_area"]
+        out += [
+            "",
+            f"**paper ratios (chip level):** ADC area vs dedicated SAR "
+            f"{pr['adc_area_ratio_vs_sar']:.1f}x, vs dedicated Flash "
+            f"{pr['adc_area_ratio_vs_flash']:.1f}x (paper: ~25x / ~51x)",
+            f"**iso-area vs {iso['conventional']['mode']}:** "
+            f"{iso['array_count_ratio']:.2f}x arrays, "
+            f"{iso['throughput_ratio']:.2f}x chip throughput "
+            f"({iso['in_memory']['chip_conversions_per_cycle']:.2f} vs "
+            f"{iso['conventional']['chip_conversions_per_cycle']:.2f} conv/cycle)",
+        ]
+    return "\n".join(out)
+
+
+def main():
+    from repro.configs.registry import get_config
+    from repro.fabric.mapper import map_model
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--mode", default="hybrid", choices=("pair_sar", "flash", "hybrid"))
+    ap.add_argument("--arrays", type=int, default=256)
+    ap.add_argument("--tokens", type=int, default=1)
+    ap.add_argument("--block-only", action="store_true")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    fabric = FabricConfig(mode=args.mode, n_arrays=args.arrays)
+    placements = map_model(
+        get_config(args.arch), fabric, tokens=args.tokens, block_only=args.block_only
+    )
+    report = fabric_report(placements, fabric)
+    if args.json:
+        print(json.dumps(report, indent=2, default=float))
+    else:
+        print(render_markdown(report))
+
+
+if __name__ == "__main__":
+    main()

@@ -44,14 +44,20 @@ def _flash_kernel(
     else:
         upper = n_kv
 
+    hd = k_ref.shape[3]
+
     def body(j, carry):
         m, l, acc = carry
-        k = pl.load(
-            k_ref, (0, 0, pl.dslice(j * block_k, block_k), slice(None))
-        ).astype(jnp.float32)
-        v = pl.load(
-            v_ref, (0, 0, pl.dslice(j * block_k, block_k), slice(None))
-        ).astype(jnp.float32)
+        # every index a Slice: bare ints in the tuple break interpret-mode
+        # discharge (jax state_discharge expects .shape on non-Slice indices)
+        idx = (
+            pl.dslice(0, 1),
+            pl.dslice(0, 1),
+            pl.dslice(j * block_k, block_k),
+            pl.dslice(0, hd),
+        )
+        k = pl.load(k_ref, idx)[0, 0].astype(jnp.float32)
+        v = pl.load(v_ref, idx)[0, 0].astype(jnp.float32)
         s = q @ k.T  # (bq, bk)
         if causal:
             k_pos = j * block_k + lax.broadcasted_iota(jnp.int32, (1, block_k), 1)

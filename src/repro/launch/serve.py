@@ -84,6 +84,14 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--cim", default=None, choices=[None, "fake_quant", "bitplane"])
+    ap.add_argument(
+        "--fabric",
+        default=None,
+        choices=[None, "pair_sar", "flash", "hybrid"],
+        help="also map the model onto a chip-level CiM fabric and print the "
+        "area/energy/latency/EMA rollup (repro.fabric)",
+    )
+    ap.add_argument("--fabric-arrays", type=int, default=256)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -101,6 +109,14 @@ def main():
         f"(batch {st.batch}, +{st.gen_len} tokens)"
     )
     print("[serve] sample generation:", out["generated"][0][:16].tolist())
+
+    if args.fabric:
+        from repro.fabric import FabricConfig, fabric_report, map_model, render_markdown
+
+        fb = FabricConfig(mode=args.fabric, n_arrays=args.fabric_arrays)
+        placements = map_model(cfg, fb, tokens=1)
+        print()
+        print(render_markdown(fabric_report(placements, fb)))
 
 
 if __name__ == "__main__":

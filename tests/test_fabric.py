@@ -1,0 +1,262 @@
+"""Chip-level fabric: topology sizing, mapper round-trips, pipeline
+invariants, and the paper's iso-area throughput-recovery claim."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cim_linear import CiMConfig, cim_linear, cim_matmul
+from repro.core.schedule import pair_sar_schedule
+from repro.fabric import (
+    FabricConfig,
+    arrays_for_area,
+    execute_linear,
+    execute_matmul,
+    fabric_report,
+    fabric_throughput,
+    iso_area_comparison,
+    map_matmul,
+    map_model,
+    model_matmuls,
+    pipelined_schedule,
+    render_markdown,
+)
+from repro.configs.registry import get_config
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+
+def test_topology_group_structure():
+    assert FabricConfig(mode="pair_sar", n_arrays=8).group_size == 2
+    hyb = FabricConfig(mode="hybrid", adc_bits=5, flash_bits=2, n_cim_per_group=3)
+    assert hyb.group_size == 3 + 3
+    fl = FabricConfig(mode="flash", adc_bits=5, n_cim_per_group=2, n_arrays=66)
+    assert fl.group_size == 2 + 31
+    assert FabricConfig(mode="conventional_sar", n_arrays=4).group_size == 1
+
+
+def test_topology_rounds_to_whole_groups():
+    fb = FabricConfig(mode="hybrid", n_arrays=64)  # group of 6 -> 60 arrays
+    assert fb.resolved_n_arrays() == 60
+    assert fb.n_groups == 10
+    assert fb.n_compute_arrays == 30
+
+
+def test_topology_area_budget_sizing():
+    fb = FabricConfig(mode="pair_sar", n_arrays=2)
+    budget = 10 * fb.per_array_area_um2
+    assert arrays_for_area(budget, fb) == 10
+    # the dedicated-SAR ADC is ~25x the in-memory digitizer (Table I), so an
+    # equal budget funds several-fold more collaborative arrays
+    conv = FabricConfig(mode="conventional_sar", n_arrays=2)
+    assert arrays_for_area(budget, conv) < arrays_for_area(budget, fb) / 3
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        FabricConfig(mode="nope")
+    with pytest.raises(ValueError):
+        FabricConfig(mode="hybrid", flash_bits=5, adc_bits=5)
+    with pytest.raises(ValueError):
+        FabricConfig(mode="flash", adc_bits=5, n_arrays=4)  # < one group
+
+
+# ---------------------------------------------------------------------------
+# mapper
+# ---------------------------------------------------------------------------
+
+
+def test_mapper_tile_cover():
+    fb = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+    p = map_matmul("l", m=3, k=40, n=70, fabric=fb)
+    assert p.k_tiles == 3 and p.n_tiles == 3
+    assert len(p.tiles) == 9
+    # tiles exactly cover the weight matrix
+    cover = np.zeros((40, 70), np.int32)
+    for t in p.tiles:
+        cover[t.k0 : t.k1, t.n0 : t.n1] += 1
+    assert (cover == 1).all()
+    # round-robin across the 8 compute arrays -> 2 rounds
+    assert p.rounds == 2
+    assert max(t.round for t in p.tiles) == 1
+
+
+def test_mapper_residency_and_ema():
+    small = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=4)
+    big = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=64)
+    p_small = map_matmul("l", 1, 64, 64, small)  # 4*2=8 tiles on 4 arrays
+    p_big = map_matmul("l", 1, 64, 64, big)
+    assert not p_small.resident and p_big.resident
+    assert p_small.weight_load_bits == p_big.weight_load_bits  # one pass each
+    assert p_small.conversions == p_big.conversions
+
+
+def test_mapper_model_shapes():
+    cfg = get_config("smollm-135m")
+    mms = model_matmuls(cfg, tokens=4, block_only=True)
+    names = [m[0] for m in mms]
+    assert names == [
+        "block.q_proj", "block.k_proj", "block.v_proj", "block.o_proj",
+        "block.gate_proj", "block.up_proj", "block.down_proj",
+    ]
+    d = cfg.d_model
+    assert mms[0][1:] == (4, d, cfg.n_heads * cfg.head_dim)
+    assert mms[4][1:] == (4, d, cfg.d_ff)
+    fb = FabricConfig(mode="hybrid", n_arrays=60)
+    placements = map_model(cfg, fb, tokens=4, block_only=True)
+    assert len(placements) == 7
+    # every compute array index stays in range
+    for p in placements:
+        assert all(0 <= t.array < fb.n_compute_arrays for t in p.tiles)
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_pair_sar_matches_core_two_array_schedule():
+    fb = FabricConfig(mode="pair_sar", adc_bits=5, n_arrays=2)
+    ours = pipelined_schedule(fb, n_conversions=8)
+    core = pair_sar_schedule(bits=5, n_conversions=8)
+    assert ours.n_cycles == core.n_cycles
+    assert (
+        ours.conversions_per_cycle_per_array
+        == core.conversions_per_cycle_per_array
+    )
+
+
+def test_pipeline_hybrid_wave_period():
+    # Fig. 3 steady state: 1 compute + nc staggered compares + (B-f) SAR
+    fb = FabricConfig(mode="hybrid", adc_bits=5, flash_bits=2, n_cim_per_group=3, n_arrays=6)
+    s = pipelined_schedule(fb, n_conversions=30)
+    assert s.n_cycles == (30 // 3) * (1 + 3 + 3)
+    # no reference array is double-booked (flash_ref and ref_gen same cycle)
+    busy = set()
+    for sl in s.slots:
+        if sl.array.startswith("R"):
+            assert (sl.cycle, sl.array) not in busy, (sl.cycle, sl.array)
+            busy.add((sl.cycle, sl.array))
+
+
+def test_pipeline_conventional_rates():
+    sar = fabric_throughput(FabricConfig(mode="conventional_sar", adc_bits=5, n_arrays=4))
+    fl = fabric_throughput(FabricConfig(mode="conventional_flash", adc_bits=5, n_arrays=4))
+    assert sar["conversions_per_cycle_per_array"] == pytest.approx(1 / 5, rel=0.05)
+    assert fl["conversions_per_cycle_per_array"] == pytest.approx(1.0, rel=0.05)
+
+
+def test_iso_area_throughput_recovery():
+    """The paper's system claim: at equal chip area the in-memory fabric's
+    extra arrays more than recover the halved per-array throughput."""
+    for mode in ("pair_sar", "hybrid"):
+        iso = iso_area_comparison(FabricConfig(mode=mode, adc_bits=5, n_arrays=120))
+        assert iso["array_count_ratio"] > 2.0, (mode, iso)
+        assert iso["throughput_ratio"] >= 1.0, (mode, iso)
+        assert iso["adc_area_ratio"] > 24, (mode, iso)
+
+
+# ---------------------------------------------------------------------------
+# execute: mapped == unmapped
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["bitplane", "fake_quant"])
+def test_execute_roundtrip_exact(mode):
+    fb = FabricConfig(mode="hybrid", rows=16, cols=32, n_arrays=12)
+    cim = CiMConfig(mode=mode, a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 3, 40))  # batched leading dims
+    w = jax.random.normal(jax.random.fold_in(key, 1), (40, 70))
+    y_map = execute_matmul(x, w, fb, cim, use_kernel=False)
+    y_un = cim_matmul(x, w, cim)
+    assert y_map.shape == y_un.shape == (2, 3, 70)
+    np.testing.assert_array_equal(np.asarray(y_map), np.asarray(y_un))
+
+
+def test_execute_linear_bias_and_kernel_path():
+    fb = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+    cim = CiMConfig(mode="fake_quant", a_bits=8, w_bits=8, adc_bits=5, rows=16, ste=False)
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (4, 48))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (48, 40))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (40,))
+    y_map = execute_linear(x, w, b, fabric=fb, cim=cim)  # Pallas kernel path
+    y_un = cim_linear(x, w, b, cfg=cim)
+    np.testing.assert_allclose(np.asarray(y_map), np.asarray(y_un), atol=1e-4, rtol=1e-5)
+
+
+def test_execute_bitplane_exactness_vs_integer_matmul():
+    """2^adc_bits >= 2*rows -> the whole mapped chip is an exact int matmul."""
+    from repro.core.cim_linear import quantize_symmetric
+
+    fb = FabricConfig(mode="hybrid", rows=16, cols=32, n_arrays=12)
+    cim = CiMConfig(mode="bitplane", a_bits=3, w_bits=3, adc_bits=5, rows=16, ste=False)
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (3, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 64))
+    y = execute_matmul(x, w, fb, cim)
+    xi, sx = quantize_symmetric(x, 3, True)
+    wi, sw = quantize_symmetric(w, 3, True, per_axis=-1)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray((xi @ wi) * sx * sw), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_execute_rejects_wrong_modes_and_rows():
+    fb = FabricConfig(mode="pair_sar", rows=16, n_arrays=2)
+    x = jnp.zeros((2, 16))
+    w = jnp.zeros((16, 8))
+    with pytest.raises(ValueError):
+        execute_matmul(x, w, fb, CiMConfig(mode="exact"))
+    with pytest.raises(ValueError):
+        map_matmul("l", 2, 16, 8, fb, cim=CiMConfig(mode="bitplane", rows=32))
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_report_rollup_and_ratios():
+    cfg = get_config("smollm-135m")
+    fb = FabricConfig(mode="hybrid", n_arrays=252)
+    placements = map_model(cfg, fb, tokens=4, block_only=True)
+    rep = fabric_report(placements, fb)
+    assert len(rep["layers"]) == 7
+    assert rep["totals"]["conversions"] == sum(p.conversions for p in placements)
+    assert rep["paper_ratios"]["adc_area_ratio_vs_sar"] > 24
+    assert rep["paper_ratios"]["adc_area_ratio_vs_flash"] > 50
+    assert rep["iso_area"]["throughput_ratio"] >= 1.0
+    md = render_markdown(rep)
+    assert "block.q_proj" in md and "iso-area" in md
+
+
+def test_fabric_report_ema_uses_model_residency():
+    """A layer that fits by itself still reloads when the model doesn't fit:
+    steady-state EMA must key off whole-model residency, not per-layer."""
+    fb = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=64)
+    layers = [map_matmul(f"l{i}", 1, 64, 256, fb) for i in range(10)]  # 32 tiles each
+    assert all(p.resident for p in layers)  # each fits alone on 64 arrays
+    rep = fabric_report(layers, fb)
+    assert not rep["totals"]["model_resident"]  # 320 tiles > 64 arrays
+    weight_bits = rep["totals"]["weight_program_bits"]
+    assert rep["totals"]["ema_bits_per_pass"] >= weight_bits > 0
+    # a chip that DOES hold the whole model drops the weight re-fetch term
+    big = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=320)
+    rep_big = fabric_report([map_matmul(f"l{i}", 1, 64, 256, big) for i in range(10)], big)
+    assert rep_big["totals"]["model_resident"]
+    assert rep_big["totals"]["ema_bits_per_pass"] < weight_bits
+
+
+def test_fabric_report_conventional_has_no_ratios():
+    fb = FabricConfig(mode="conventional_sar", n_arrays=16)
+    p = [map_matmul("l", 1, 32, 32, fb)]
+    rep = fabric_report(p, fb)
+    assert "paper_ratios" not in rep and "iso_area" not in rep

@@ -1,0 +1,76 @@
+"""CI gate: tier-1 tests + the <30 s fabric smoke benchmark.
+
+Runs the repo's tier-1 suite (ROADMAP.md), then the fabric design-space
+sweep, and writes ``BENCH_fabric.json`` so successive PRs accumulate a
+perf trajectory. Exits non-zero if either stage fails or the smoke
+benchmark blows its time budget.
+
+  python tools/ci_check.py [--skip-tests] [--out BENCH_fabric.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SMOKE_BUDGET_S = 30.0
+
+
+def run_tier1() -> bool:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q"], cwd=REPO, env=env
+    )
+    return proc.returncode == 0
+
+
+def run_fabric_smoke(out: Path) -> bool:
+    sys.path.insert(0, str(REPO / "src"))
+    sys.path.insert(0, str(REPO))
+    from benchmarks.fabric_sweep import fabric_mapping_smoke, sweep_points
+
+    t0 = time.perf_counter()
+    payload = {"sweep": sweep_points(), "smoke": fabric_mapping_smoke()}
+    wall = time.perf_counter() - t0
+    payload["wall_s"] = wall
+    out.write_text(json.dumps(payload, indent=2, default=float))
+    print(f"[ci_check] fabric smoke: {len(payload['sweep'])} points in "
+          f"{wall:.1f}s -> {out}")
+    if wall > SMOKE_BUDGET_S:
+        print(f"[ci_check] FAIL: smoke took {wall:.1f}s > {SMOKE_BUDGET_S}s budget")
+        return False
+    ratios = [p["iso_area_throughput_ratio"] for p in payload["sweep"]
+              if p["mode"] in ("pair_sar", "hybrid")]
+    if not all(r >= 1.0 for r in ratios):
+        print(f"[ci_check] FAIL: iso-area throughput regression: {ratios}")
+        return False
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-tests", action="store_true")
+    ap.add_argument("--out", default=str(REPO / "BENCH_fabric.json"))
+    args = ap.parse_args()
+
+    ok = True
+    if not args.skip_tests:
+        print("[ci_check] running tier-1 tests ...")
+        ok = run_tier1()
+        print(f"[ci_check] tier-1: {'PASS' if ok else 'FAIL'}")
+    if ok:
+        ok = run_fabric_smoke(Path(args.out))
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()
