@@ -3,8 +3,11 @@
 Emits one JSON record per design point — chip area, digitization area,
 conversions/cycle, throughput/mm^2, energy/conversion, and the iso-area
 ratios against the conventional-ADC baseline — so successive PRs can track
-the chip-level trajectory. Doubles as the ``fabric`` entry of
-``benchmarks/run.py`` and the <30 s smoke benchmark of ``tools/ci_check.py``.
+the chip-level trajectory. ``shard_sweep_points`` extends the sweep across
+1- / 4- / 16-chip meshes (``repro.fabric.shard``), reporting per-layer
+on-chip EMA vs cross-chip reduce-scatter traffic. Doubles as the ``fabric``
+entry of ``benchmarks/run.py`` and the <30 s smoke benchmark of
+``tools/ci_check.py``.
 
   PYTHONPATH=src python -m benchmarks.fabric_sweep [--out BENCH_fabric.json]
 """
@@ -58,6 +61,57 @@ def sweep_points(
     return points
 
 
+def shard_sweep_points(
+    meshes=((1, 1), (2, 2), (4, 4)),  # 1-, 4-, 16-chip meshes (data x model)
+    mode="hybrid",
+    n_arrays=252,
+    tokens=4,
+) -> list[dict]:
+    """Shard a smollm block across chip meshes; per-layer on-chip EMA vs
+    cross-chip reduce-scatter traffic, per ``repro.fabric.shard``."""
+    from repro.configs.registry import get_config
+    from repro.fabric.report import sharded_fabric_report
+    from repro.fabric.shard import shard_model
+    from repro.fabric.topology import ChipMeshConfig, FabricConfig
+
+    cfg = get_config("smollm-135m")
+    points = []
+    for data, model in meshes:
+        cm = ChipMeshConfig(
+            data=data, model=model, fabric=FabricConfig(mode=mode, n_arrays=n_arrays)
+        )
+        t0 = time.perf_counter()
+        sps = shard_model(cfg, cm, tokens=tokens, block_only=True)
+        rep = sharded_fabric_report(sps, cm)
+        wall = time.perf_counter() - t0
+        t = rep["totals"]
+        points.append(
+            {
+                "mesh": f"{data}x{model}",
+                "n_chips": cm.n_chips,
+                "map_report_s": wall,
+                "tiles_per_chip": t["tiles_per_chip"],
+                "model_resident": t["model_resident"],
+                "latency_s": t["latency_s"],
+                "onchip_ema_bits_per_pass": t["ema_bits_per_pass"],
+                "crosschip_bits_per_pass": t["crosschip_bits_per_pass"],
+                "crosschip_energy_pj": t["crosschip_energy_pj"],
+                "fallbacks": len(rep["mesh"]["fallbacks"]),
+                "layers": [
+                    {
+                        "layer": r["layer"],
+                        "k_splits": r["k_splits"],
+                        "d_splits": r["d_splits"],
+                        "onchip_ema_bits": r["ema_bits_per_pass"],
+                        "crosschip_bits": r["crosschip_bits_per_pass"],
+                    }
+                    for r in rep["layers"]
+                ],
+            }
+        )
+    return points
+
+
 def fabric_mapping_smoke() -> dict:
     """Map a smollm block on a hybrid fabric — the perf-trajectory anchor."""
     from repro.configs.registry import get_config
@@ -105,6 +159,16 @@ def fabric_bench() -> list[tuple]:
             f"tiles={smoke['tiles']};iso_ratio={smoke['iso_area_throughput_ratio']:.2f}",
         )
     )
+    for p in shard_sweep_points():
+        rows.append(
+            (
+                f"fabric/shard_smollm_block_{p['mesh']}",
+                p["map_report_s"] * 1e6,
+                f"chips={p['n_chips']};onchip_ema={p['onchip_ema_bits_per_pass']:.3g};"
+                f"xchip={p['crosschip_bits_per_pass']:.3g};"
+                f"resident={int(p['model_resident'])}",
+            )
+        )
     return rows
 
 
@@ -113,10 +177,9 @@ def main():
     ap.add_argument("--out", default="BENCH_fabric.json")
     args = ap.parse_args()
     t0 = time.perf_counter()
-    payload = {
-        "sweep": sweep_points(),
-        "smoke": fabric_mapping_smoke(),
-    }
+    # shard-sweep data is written by tools/ci_check.py to BENCH_fabric_shard.json
+    # (single source of truth); here it only feeds the run.py bench rows
+    payload = {"sweep": sweep_points(), "smoke": fabric_mapping_smoke()}
     payload["wall_s"] = time.perf_counter() - t0
     Path(args.out).write_text(json.dumps(payload, indent=2, default=float))
     print(f"[fabric_sweep] {len(payload['sweep'])} design points -> {args.out} "

@@ -24,21 +24,36 @@ accesses because more weights stay resident. This package models that chip:
   * :mod:`repro.fabric.report` — per-layer and end-to-end
     area / energy / latency / EMA rollups, rendered like
     ``roofline.report``.
+  * :mod:`repro.fabric.shard` — shard mapped placements across a mesh of
+    chips (``ChipMeshConfig``): K-parallel tiles over the ``model`` axis
+    (digital partial sums combined with a reduce-scatter over inter-chip
+    links), batch over ``data``; divisibility fallbacks follow
+    ``launch.shardings``. ``sharded_fabric_report`` separates on-chip EMA
+    from cross-chip link traffic.
 
 Paper-figure correspondence: Fig. 1 (networking configurations) ->
 ``FabricConfig.mode``; Fig. 2 (pair SAR role swap) -> ``pair_sar`` groups;
 Fig. 3 + 5c (hybrid shared flash bank) -> ``hybrid`` groups and the
 pipeline's bank arbitration; Table I anchors the area/energy rollups.
+
+See ``docs/fabric.md`` for the full architecture guide.
 """
 
 from repro.fabric.execute import execute_linear, execute_matmul
 from repro.fabric.mapper import LayerPlacement, map_matmul, map_model, model_matmuls
 from repro.fabric.pipeline import fabric_throughput, iso_area_comparison, pipelined_schedule
-from repro.fabric.report import fabric_report, render_markdown
-from repro.fabric.topology import FabricConfig, arrays_for_area
+from repro.fabric.report import fabric_report, render_markdown, sharded_fabric_report
+from repro.fabric.shard import (
+    ShardedPlacement,
+    execute_sharded_matmul,
+    shard_model,
+    shard_placement,
+)
+from repro.fabric.topology import ChipMeshConfig, FabricConfig, arrays_for_area
 
 __all__ = [
     "FabricConfig",
+    "ChipMeshConfig",
     "arrays_for_area",
     "LayerPlacement",
     "map_matmul",
@@ -49,6 +64,11 @@ __all__ = [
     "pipelined_schedule",
     "execute_matmul",
     "execute_linear",
+    "ShardedPlacement",
+    "shard_placement",
+    "shard_model",
+    "execute_sharded_matmul",
     "fabric_report",
+    "sharded_fabric_report",
     "render_markdown",
 ]

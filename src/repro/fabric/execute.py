@@ -52,6 +52,18 @@ def execute_matmul(
 
     ``x``: (..., K); ``w``: (K, N). Matches ``cim_matmul(x, w, cim)``
     bit-for-bit in both ``bitplane`` and ``fake_quant`` modes (noiseless ADC).
+
+    Example::
+
+        >>> import jax
+        >>> from repro.core.cim_linear import CiMConfig
+        >>> from repro.fabric import FabricConfig, execute_matmul
+        >>> fb = FabricConfig(mode="hybrid", n_arrays=12)
+        >>> cim = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+        >>> x = jax.random.normal(jax.random.PRNGKey(0), (2, 40))
+        >>> w = jax.random.normal(jax.random.PRNGKey(1), (40, 70))
+        >>> execute_matmul(x, w, fb, cim).shape
+        (2, 70)
     """
     if cim.mode not in ("bitplane", "fake_quant"):
         raise ValueError(f"fabric execution needs bitplane|fake_quant, got {cim.mode!r}")
@@ -126,7 +138,17 @@ def execute_linear(
     placement: Optional[LayerPlacement] = None,
     key: Optional[jax.Array] = None,
 ):
-    """Mapped counterpart of ``core.cim_linear.cim_linear``."""
+    """Mapped counterpart of ``core.cim_linear.cim_linear``.
+
+    Example::
+
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.fabric import execute_linear
+        >>> x = jax.random.normal(jax.random.PRNGKey(0), (4, 48))
+        >>> w = jax.random.normal(jax.random.PRNGKey(1), (48, 40))
+        >>> execute_linear(x, w, bias=jnp.zeros((40,))).shape
+        (4, 40)
+    """
     if fabric is None:
         fabric = FabricConfig()
     if cim is None:

@@ -47,7 +47,15 @@ class TileAssignment:
 
 @dataclasses.dataclass
 class LayerPlacement:
-    """Placement of one matmul on the fabric, plus its cost counters."""
+    """Placement of one matmul on the fabric, plus its cost counters.
+
+    Example::
+
+        >>> from repro.fabric import FabricConfig, map_matmul
+        >>> p = map_matmul("l", m=4, k=64, n=64, fabric=FabricConfig(mode="pair_sar", n_arrays=8))
+        >>> p.k_tiles, p.n_tiles, p.rounds, p.resident
+        (4, 2, 1, True)
+    """
 
     name: str
     m: int
@@ -124,6 +132,13 @@ def map_matmul(
 
     ``array_offset`` rotates the round-robin start so consecutive layers of a
     model spread across the chip instead of piling onto array 0.
+
+    Example::
+
+        >>> from repro.fabric import FabricConfig, map_matmul
+        >>> p = map_matmul("q_proj", m=1, k=40, n=70, fabric=FabricConfig(mode="pair_sar", n_arrays=8))
+        >>> (p.k_tiles, p.n_tiles), len(p.tiles), p.rounds
+        ((3, 3), 9, 2)
     """
     if cim is None:
         cim = CiMConfig(mode="bitplane", adc_bits=fabric.adc_bits, rows=fabric.rows, ste=False)
@@ -173,6 +188,13 @@ def model_matmuls(
     ``examples/fabric_map.py`` workload); otherwise all ``n_layers`` layers
     plus the unembedding are included. MoE counts the ``top_k`` activated
     experts; Mamba/hybrid families map their projection matmuls.
+
+    Example::
+
+        >>> from repro.configs.registry import get_config
+        >>> from repro.fabric import model_matmuls
+        >>> [name for name, *_ in model_matmuls(get_config("smollm-135m"), 4, block_only=True)][:2]
+        ['block.q_proj', 'block.k_proj']
     """
     d = cfg.d_model
     out: List[Tuple[str, int, int, int]] = []
@@ -239,7 +261,17 @@ def map_model(
     block_only: bool = False,
 ) -> List[LayerPlacement]:
     """Place every linear of ``cfg`` onto the fabric (round-robin across
-    layers so the chip fills evenly)."""
+    layers so the chip fills evenly).
+
+    Example::
+
+        >>> from repro.configs.registry import get_config
+        >>> from repro.fabric import FabricConfig, map_model
+        >>> ps = map_model(get_config("smollm-135m"), FabricConfig(mode="hybrid", n_arrays=60),
+        ...                tokens=4, block_only=True)
+        >>> len(ps), ps[0].name
+        (7, 'block.q_proj')
+    """
     placements: List[LayerPlacement] = []
     offset = 0
     for name, m, k, n in model_matmuls(cfg, tokens, block_only=block_only):

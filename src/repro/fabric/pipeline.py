@@ -120,12 +120,28 @@ _SCHEDULERS = {
 
 
 def pipelined_schedule(fabric: FabricConfig, n_conversions: int = 32) -> ScheduleResult:
-    """Steady-state schedule of ``n_conversions`` on ONE digitization group."""
+    """Steady-state schedule of ``n_conversions`` on ONE digitization group.
+
+    Example::
+
+        >>> from repro.fabric import FabricConfig, pipelined_schedule
+        >>> s = pipelined_schedule(FabricConfig(mode="pair_sar", adc_bits=5, n_arrays=2), 8)
+        >>> s.n_conversions, s.n_cycles > 0
+        (8, True)
+    """
     return _SCHEDULERS[fabric.mode](fabric, n_conversions)
 
 
 def fabric_throughput(fabric: FabricConfig, n_conversions: int = 96) -> dict:
-    """Chip-level steady-state throughput and utilization."""
+    """Chip-level steady-state throughput and utilization.
+
+    Example::
+
+        >>> from repro.fabric import FabricConfig, fabric_throughput
+        >>> tp = fabric_throughput(FabricConfig(mode="hybrid", n_arrays=60))
+        >>> tp["n_groups"], tp["chip_conversions_per_cycle"] > 0
+        (10, True)
+    """
     sched = pipelined_schedule(fabric, n_conversions)
     group_rate = sched.n_conversions / sched.n_cycles
     n_groups = fabric.n_groups
@@ -153,6 +169,13 @@ def iso_area_comparison(fabric: FabricConfig, n_conversions: int = 96) -> dict:
     loss costs (holds for pair_sar and hybrid against the dedicated-SAR
     baseline; one-to-many flash coupling trades throughput density for its
     ~51x ADC area and ~13x energy advantages).
+
+    Example::
+
+        >>> from repro.fabric import FabricConfig, iso_area_comparison
+        >>> iso = iso_area_comparison(FabricConfig(mode="pair_sar", n_arrays=120))
+        >>> iso["throughput_ratio"] >= 1.0 and iso["adc_area_ratio"] > 24
+        True
     """
     conv = fabric.iso_area_counterpart()
     mine = fabric_throughput(fabric, n_conversions)

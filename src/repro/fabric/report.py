@@ -6,6 +6,13 @@ digitization area vs the dedicated 40 nm SAR (~25x) and Flash (~51x) ADCs
 (Table I), and the iso-area throughput comparison against a conventional-ADC
 fabric of equal footprint.
 
+Multi-chip meshes (``fabric.shard``) roll up through
+:func:`sharded_fabric_report`, which keeps the single-chip columns for the
+per-chip shard every chip runs and adds the mesh's one new cost: cross-chip
+reduce-scatter traffic (bits / energy / link latency), reported separately
+from on-chip EMA so the report shows what sharding buys (residency, lower
+on-chip EMA) against what it costs (link traffic).
+
   PYTHONPATH=src python -m repro.fabric.report --arch smollm-135m --mode hybrid
 """
 
@@ -18,9 +25,9 @@ from typing import List, Optional
 from repro.core.energy_area import area_um2, energy_pj
 from repro.fabric.mapper import LayerPlacement
 from repro.fabric.pipeline import fabric_throughput, iso_area_comparison
-from repro.fabric.topology import EMA_PJ_PER_BIT, FabricConfig
+from repro.fabric.topology import EMA_PJ_PER_BIT, ChipMeshConfig, FabricConfig
 
-__all__ = ["fabric_report", "render_markdown"]
+__all__ = ["fabric_report", "sharded_fabric_report", "render_markdown"]
 
 
 def _layer_row(
@@ -51,12 +58,47 @@ def _layer_row(
     }
 
 
+def _chip_sections(fabric: FabricConfig, tp: dict, n_conversions: int) -> dict:
+    """Placement-independent report sections: chip + paper ratios + iso-area."""
+    sections = {
+        "chip": {
+            "mode": fabric.mode,
+            "n_arrays": fabric.resolved_n_arrays(),
+            "n_compute_arrays": fabric.n_compute_arrays,
+            "chip_area_mm2": fabric.chip_area_um2() / 1e6,
+            "chip_adc_area_mm2": fabric.chip_adc_area_um2() / 1e6,
+            "weight_capacity_bits": fabric.weight_capacity_bits(),
+            **tp,
+        }
+    }
+    if not fabric.mode.startswith("conventional"):
+        n_arr = fabric.resolved_n_arrays()
+        sections["paper_ratios"] = {
+            # chip-level digitization-area ratios vs dedicated 40nm ADCs
+            "adc_area_ratio_vs_sar": (n_arr * area_um2("sar", fabric.adc_bits))
+            / fabric.chip_adc_area_um2(),
+            "adc_area_ratio_vs_flash": (n_arr * area_um2("flash", fabric.adc_bits))
+            / fabric.chip_adc_area_um2(),
+        }
+        sections["iso_area"] = iso_area_comparison(fabric, n_conversions)
+    return sections
+
+
 def fabric_report(
     placements: List[LayerPlacement],
     fabric: FabricConfig,
     n_conversions: int = 96,
 ) -> dict:
-    """Roll a list of layer placements up into the chip-level report."""
+    """Roll a list of layer placements up into the chip-level report.
+
+    Example::
+
+        >>> from repro.fabric import FabricConfig, fabric_report, map_matmul
+        >>> fb = FabricConfig(mode="hybrid", n_arrays=60)
+        >>> rep = fabric_report([map_matmul("l", 1, 64, 64, fb)], fb)
+        >>> sorted(rep)
+        ['chip', 'iso_area', 'layers', 'paper_ratios', 'totals']
+    """
     tp = fabric_throughput(fabric, n_conversions)
     rate_per_compute = (
         tp["group_conversions_per_cycle"] / fabric.compute_arrays_per_group
@@ -77,61 +119,181 @@ def fabric_report(
         "ema_energy_pj": sum(r["ema_energy_pj"] for r in layers),
         "weight_program_bits": sum(r["weight_load_bits"] for r in layers),
     }
-    chip = {
-        "mode": fabric.mode,
-        "n_arrays": fabric.resolved_n_arrays(),
-        "n_compute_arrays": fabric.n_compute_arrays,
-        "chip_area_mm2": fabric.chip_area_um2() / 1e6,
-        "chip_adc_area_mm2": fabric.chip_adc_area_um2() / 1e6,
-        "weight_capacity_bits": fabric.weight_capacity_bits(),
-        **tp,
+    return {
+        **_chip_sections(fabric, tp, n_conversions),
+        "layers": layers,
+        "totals": totals,
     }
-    report = {"chip": chip, "layers": layers, "totals": totals}
-    if not fabric.mode.startswith("conventional"):
-        n_arr = fabric.resolved_n_arrays()
-        report["paper_ratios"] = {
-            # chip-level digitization-area ratios vs dedicated 40nm ADCs
-            "adc_area_ratio_vs_sar": (n_arr * area_um2("sar", fabric.adc_bits))
-            / fabric.chip_adc_area_um2(),
-            "adc_area_ratio_vs_flash": (n_arr * area_um2("flash", fabric.adc_bits))
-            / fabric.chip_adc_area_um2(),
-        }
-        report["iso_area"] = iso_area_comparison(fabric, n_conversions)
+
+
+def sharded_fabric_report(
+    sharded: list,
+    chip_mesh: ChipMeshConfig,
+    n_conversions: int = 96,
+) -> dict:
+    """Mesh-level rollup of :class:`~repro.fabric.shard.ShardedPlacement`s.
+
+    Layer rows keep the single-chip columns — ``conversions``, digitization
+    energy, and on-chip ``ema_bits_per_pass`` are mesh totals (summed over
+    active chips); ``latency_cycles`` is the per-chip critical path (chips
+    run in parallel) — and add the mesh's new cost columns:
+    ``crosschip_bits_per_pass`` (ring reduce-scatter traffic combining the
+    K-parallel partial sums), its link energy, and its link latency.
+    Residency is per chip: each model-axis chip only has to hold its own
+    K-shard, which is how a mesh turns a reload-bound model resident.
+
+    Example::
+
+        >>> from repro.configs.registry import get_config
+        >>> from repro.fabric import ChipMeshConfig, FabricConfig, shard_model, sharded_fabric_report
+        >>> cm = ChipMeshConfig(model=4, fabric=FabricConfig(mode="hybrid", n_arrays=60))
+        >>> sps = shard_model(get_config("smollm-135m"), cm, tokens=4, block_only=True)
+        >>> rep = sharded_fabric_report(sps, cm)
+        >>> rep["mesh"]["n_chips"], rep["totals"]["crosschip_bits_per_pass"] > 0
+        (4, True)
+    """
+    fabric = chip_mesh.fabric
+    tp = fabric_throughput(fabric, n_conversions)
+    rate_per_compute = (
+        tp["group_conversions_per_cycle"] / fabric.compute_arrays_per_group
+    )
+    # residency is per chip: every chip must hold its shard of EVERY layer
+    chip_tiles = sum(sp.chip.n_weight_tiles for sp in sharded)
+    mesh_resident = chip_tiles <= fabric.n_compute_arrays
+
+    layers = []
+    for sp in sharded:
+        base = _layer_row(sp.chip, fabric, rate_per_compute, mesh_resident)
+        active = sp.n_chips_active
+        layers.append(
+            {
+                **base,
+                "layer": sp.name,
+                "m": sp.m,
+                "k": sp.k,
+                "n": sp.n,
+                "k_splits": sp.k_splits,
+                "d_splits": sp.d_splits,
+                "chips_active": active,
+                # mesh totals (chips run the same shard cost in parallel)
+                "conversions": base["conversions"] * active,
+                "digitization_energy_pj": base["digitization_energy_pj"] * active,
+                "weight_load_bits": base["weight_load_bits"] * active,
+                "ema_bits_per_pass": base["ema_bits_per_pass"] * active,
+                "ema_energy_pj": base["ema_energy_pj"] * active,
+                "crosschip_bits_per_pass": sp.crosschip_bits_per_pass,
+                "crosschip_energy_pj": sp.crosschip_energy_pj,
+                "crosschip_latency_s": sp.crosschip_latency_s,
+                "latency_total_s": base["latency_s"] + sp.crosschip_latency_s,
+            }
+        )
+    totals = {
+        "tiles_per_chip": chip_tiles,
+        "model_resident": mesh_resident,
+        "conversions": sum(r["conversions"] for r in layers),
+        "latency_cycles": sum(r["latency_cycles"] for r in layers),
+        "latency_s": sum(r["latency_total_s"] for r in layers),
+        "digitization_energy_pj": sum(r["digitization_energy_pj"] for r in layers),
+        "ema_bits_per_pass": sum(r["ema_bits_per_pass"] for r in layers),
+        "ema_energy_pj": sum(r["ema_energy_pj"] for r in layers),
+        "weight_program_bits": sum(r["weight_load_bits"] for r in layers),
+        "crosschip_bits_per_pass": sum(r["crosschip_bits_per_pass"] for r in layers),
+        "crosschip_energy_pj": sum(r["crosschip_energy_pj"] for r in layers),
+        "crosschip_latency_s": sum(r["crosschip_latency_s"] for r in layers),
+    }
+    report = {
+        "mesh": {
+            "shape": {"data": chip_mesh.data, "model": chip_mesh.model},
+            "n_chips": chip_mesh.n_chips,
+            "total_area_mm2": chip_mesh.total_area_um2() / 1e6,
+            "total_weight_capacity_bits": chip_mesh.total_weight_capacity_bits(),
+            "link_bits_per_s": chip_mesh.link_bits_per_s,
+            "link_pj_per_bit": chip_mesh.link_pj_per_bit,
+            "psum_bits": chip_mesh.psum_bits,
+            "fallbacks": [f for sp in sharded for f in sp.fallbacks],
+        },
+        **_chip_sections(fabric, tp, n_conversions),
+        "layers": layers,
+        "totals": totals,
+    }
     return report
 
 
 def render_markdown(report: dict, max_layers: Optional[int] = 24) -> str:
-    """Markdown tables in the roofline.report house style."""
+    """Markdown tables in the roofline.report house style.
+
+    Handles both single-chip (``fabric_report``) and mesh
+    (``sharded_fabric_report``) reports; mesh reports gain a header line and
+    split / cross-chip-traffic columns.
+
+    Example::
+
+        >>> from repro.fabric import FabricConfig, fabric_report, map_matmul, render_markdown
+        >>> fb = FabricConfig(mode="hybrid", n_arrays=60)
+        >>> md = render_markdown(fabric_report([map_matmul("l", 1, 64, 64, fb)], fb))
+        >>> md.splitlines()[0].startswith("### fabric: hybrid — 60 arrays")
+        True
+    """
+    mesh = report.get("mesh")
     chip = report["chip"]
     out = [
         f"### fabric: {chip['mode']} — {chip['n_arrays']} arrays "
         f"({chip['n_compute_arrays']} compute), {chip['chip_area_mm2']:.3f} mm^2 "
         f"(ADC {chip['chip_adc_area_mm2']:.4f} mm^2), "
-        f"{chip['chip_conversions_per_s']:.3g} conv/s",
+        f"{chip['chip_conversions_per_s']:.3g} conv/s"
+        + (" per chip" if mesh else ""),
+    ]
+    if mesh:
+        out.append(
+            f"**mesh:** {mesh['shape']['data']}x{mesh['shape']['model']} "
+            f"(data x model) = {mesh['n_chips']} chips, "
+            f"{mesh['total_area_mm2']:.3f} mm^2 total, links "
+            f"{mesh['link_bits_per_s']/1e9:.3g} Gbit/s @ "
+            f"{mesh['link_pj_per_bit']:.3g} pJ/bit"
+            + (f", {len(mesh['fallbacks'])} sharding fallback(s)"
+               if mesh["fallbacks"] else "")
+        )
+    xcol = " KxD split | xchip/pass (bits) |" if mesh else ""
+    out += [
         "",
         "| layer | MxKxN | tiles | rounds | resident | conv | lat (cyc) | "
-        "E_dig (pJ) | EMA/pass (bits) |",
-        "|---|---|---|---|---|---|---|---|---|",
+        f"E_dig (pJ) | EMA/pass (bits) |{xcol}",
+        "|---|---|---|---|---|---|---|---|---|" + ("---|---|" if mesh else ""),
     ]
     layers = report["layers"]
     shown = layers if max_layers is None else layers[:max_layers]
     for r in shown:
+        xcell = (
+            f" {r['k_splits']}x{r['d_splits']} | {r['crosschip_bits_per_pass']:.3g} |"
+            if mesh
+            else ""
+        )
         out.append(
             f"| {r['layer']} | {r['m']}x{r['k']}x{r['n']} | {r['tiles']} | "
             f"{r['rounds']} | {'y' if r['resident'] else 'n'} | {r['conversions']:.3g} | "
             f"{r['latency_cycles']:.3g} | {r['digitization_energy_pj']:.3g} | "
-            f"{r['ema_bits_per_pass']:.3g} |"
+            f"{r['ema_bits_per_pass']:.3g} |" + xcell
         )
     if max_layers is not None and len(layers) > max_layers:
-        out.append(f"| ... {len(layers) - max_layers} more layers ... | | | | | | | | |")
+        out.append(
+            f"| ... {len(layers) - max_layers} more layers ... | | | | | | | | |"
+            + (" | |" if mesh else "")
+        )
     t = report["totals"]
+    tiles_key = "tiles_per_chip" if mesh else "tiles"
     out += [
         "",
-        f"**totals:** {t['tiles']} tiles "
+        f"**totals:** {t[tiles_key]} tiles{' per chip' if mesh else ''} "
         f"({'model-resident' if t['model_resident'] else 'rounds needed'}), "
         f"{t['conversions']:.3g} conversions, {t['latency_s']*1e3:.3g} ms, "
         f"{t['digitization_energy_pj']/1e6:.3g} uJ digitization, "
-        f"{t['ema_energy_pj']/1e6:.3g} uJ external-memory",
+        f"{t['ema_energy_pj']/1e6:.3g} uJ on-chip external-memory"
+        + (
+            f", {t['crosschip_bits_per_pass']:.3g} bits / "
+            f"{t['crosschip_energy_pj']/1e6:.3g} uJ cross-chip reduce-scatter"
+            if mesh
+            else ""
+        ),
     ]
     if "paper_ratios" in report:
         pr = report["paper_ratios"]

@@ -1,0 +1,323 @@
+"""Shard mapped CiM fabrics across a mesh of chips (ROADMAP: multi-chip).
+
+One chip (``FabricConfig``) holds a bounded number of resident weight tiles;
+the paper's system argument — cheap memory-immersed digitization buys more
+arrays, more resident weights, fewer external memory accesses — extends to a
+*mesh* of such chips (:class:`repro.fabric.topology.ChipMeshConfig`):
+
+  * ``model`` axis — a layer's K-parallel reduction tiles are split across
+    chips at ``rows`` boundaries. Each chip digitizes the partial
+    product-sums of its own K-slice locally (nothing analog ever crosses a
+    chip boundary); the digital partials are combined with a ring
+    **reduce-scatter** over the inter-chip links — the only new traffic the
+    mesh introduces, priced separately from on-chip EMA in
+    ``fabric.report``.
+  * ``data`` axis — chips hold weight copies and split the batch (M); no
+    cross-chip combine is needed.
+
+Divisibility follows the production sharding rules: the split is planned with
+``launch.shardings.spec_for`` (logical ``tp`` -> mesh ``model``, ``dp`` ->
+``data``), and any dimension that does not divide its axis falls back to
+replication *with the fallback recorded* — the same bookkeeping the dry-run
+report uses, so an uneven layer silently costs nothing extra instead of
+silently mis-mapping.
+
+Numerics: :func:`execute_sharded_matmul` mirrors ``fabric.execute`` exactly —
+fabric-level quantization once, then per (data-shard, column-tile, K-shard)
+tile execution through ``core.cim_linear``'s per-plane machinery. On a 1x1
+mesh it performs the identical operation sequence, so it is bit-for-bit equal
+to the unsharded ``execute_matmul`` (asserted in ``tests/test_fabric_shard``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.cim_linear import (
+    CimStats,
+    CiMConfig,
+    _bitplane_matmul,
+    _fake_quant_matmul,
+    quantize_symmetric,
+)
+from repro.fabric.mapper import LayerPlacement, map_matmul, model_matmuls
+from repro.fabric.topology import ChipMeshConfig
+from repro.launch import shardings as sh
+
+__all__ = [
+    "ShardedPlacement",
+    "shard_placement",
+    "shard_model",
+    "execute_sharded_matmul",
+]
+
+
+@dataclasses.dataclass
+class ShardedPlacement:
+    """One layer's placement on a chip mesh, plus its cross-chip costs.
+
+    ``chip`` is the per-chip :class:`~repro.fabric.mapper.LayerPlacement` of
+    the K/M shard every chip actually executes (on a 1x1 mesh it is the whole
+    layer). ``k_splits`` / ``d_splits`` are the *realized* split factors —
+    equal to the mesh axes when the tile/batch counts divide, 1 (replication)
+    when they don't, with each fallback recorded in ``fallbacks``.
+
+    Example::
+
+        >>> from repro.fabric import ChipMeshConfig, FabricConfig, shard_placement, map_matmul
+        >>> cm = ChipMeshConfig(model=2, fabric=FabricConfig(mode="pair_sar", n_arrays=8))
+        >>> sp = shard_placement(map_matmul("l", 4, 64, 64, cm.fabric), cm)
+        >>> sp.k_splits, sp.chip.k_tiles, sp.crosschip_bits_per_pass > 0
+        (2, 2, True)
+    """
+
+    name: str
+    m: int
+    k: int
+    n: int
+    chip_mesh: ChipMeshConfig
+    chip: LayerPlacement  # what ONE chip runs (K/M shard mapped on its fabric)
+    k_splits: int  # chips combining partial sums over the model axis
+    d_splits: int  # batch shards over the data axis
+    fallbacks: List[str]
+
+    # -- cross-chip traffic (the mesh's only new cost) ----------------------
+
+    @property
+    def crosschip_bits_per_pass(self) -> int:
+        """Total bits crossing chip links per forward pass: a ring
+        reduce-scatter over ``k_splits`` chips moves ``(C-1)/C`` of each
+        chip's (M_shard, N) partial-sum block, summed over chips and repeated
+        per data-shard group — ``(C-1) * M * N * psum_bits`` in total."""
+        if self.k_splits <= 1:
+            return 0
+        return (self.k_splits - 1) * self.m * self.n * self.chip_mesh.psum_bits
+
+    @property
+    def crosschip_energy_pj(self) -> float:
+        return self.crosschip_bits_per_pass * self.chip_mesh.link_pj_per_bit
+
+    @property
+    def crosschip_latency_s(self) -> float:
+        """Link time of the reduce-scatter: rings run in parallel across data
+        groups, so the critical path is one chip's send volume."""
+        if self.k_splits <= 1:
+            return 0.0
+        per_chip = (
+            (self.k_splits - 1)
+            / self.k_splits
+            * (self.m // self.d_splits)
+            * self.n
+            * self.chip_mesh.psum_bits
+        )
+        return per_chip / self.chip_mesh.link_bits_per_s
+
+    @property
+    def n_chips_active(self) -> int:
+        return self.k_splits * self.d_splits
+
+
+def _k_slice(k: int, rows: int, k_tiles: int, k_splits: int, c: int) -> tuple:
+    """Element range [k0, k1) of K-shard ``c`` (tile-granular, ragged tail)."""
+    tiles_per = k_tiles // k_splits
+    return c * tiles_per * rows, min(k, (c + 1) * tiles_per * rows)
+
+
+def shard_placement(
+    placement: LayerPlacement,
+    chip_mesh: ChipMeshConfig,
+    array_offset: int = 0,
+) -> ShardedPlacement:
+    """Partition one mapped layer across the chip mesh.
+
+    K-parallel tiles go over the ``model`` axis, batch rows over ``data``,
+    using the same ``spec_for`` divisibility rules (and ``FALLBACKS``
+    recording) as the production param shardings: a K-tile count that does
+    not divide the model axis — or a batch that does not divide the data
+    axis — falls back to replication for that dimension.
+
+    Example::
+
+        >>> from repro.fabric import ChipMeshConfig, FabricConfig, map_matmul, shard_placement
+        >>> fb = FabricConfig(mode="pair_sar", n_arrays=8)
+        >>> sp = shard_placement(map_matmul("l", 4, 64, 64, fb), ChipMeshConfig(model=4, fabric=fb))
+        >>> sp.k_splits, sp.chip.k
+        (4, 16)
+    """
+    if placement.fabric != chip_mesh.fabric:
+        raise ValueError("placement was mapped on a different FabricConfig than chip_mesh.fabric")
+    mesh = chip_mesh.mesh()
+    before = len(sh.FALLBACKS)
+    spec = sh.spec_for(
+        mesh,
+        (placement.k_tiles, placement.m),
+        ("tp", "dp"),
+        label=f"fabric.shard/{placement.name}",
+    )
+    fallbacks = list(sh.FALLBACKS[before:])
+    k_splits = sh.axes_size(mesh, ("model",)) if spec[0] is not None else 1
+    d_splits = sh.axes_size(mesh, ("data",)) if spec[1] is not None else 1
+
+    if k_splits == 1 and d_splits == 1 and array_offset == 0:
+        chip = placement  # whole layer on every chip — exactly the 1-chip map
+    else:
+        k0, k1 = _k_slice(placement.k, placement.fabric.rows, placement.k_tiles, k_splits, 0)
+        chip = map_matmul(
+            placement.name,
+            placement.m // d_splits,
+            k1 - k0,
+            placement.n,
+            chip_mesh.fabric,
+            cim=placement.cim,
+            array_offset=array_offset,
+        )
+    return ShardedPlacement(
+        name=placement.name,
+        m=placement.m,
+        k=placement.k,
+        n=placement.n,
+        chip_mesh=chip_mesh,
+        chip=chip,
+        k_splits=k_splits,
+        d_splits=d_splits,
+        fallbacks=fallbacks,
+    )
+
+
+def shard_model(
+    cfg: ModelConfig,
+    chip_mesh: ChipMeshConfig,
+    tokens: int = 1,
+    cim: Optional[CiMConfig] = None,
+    block_only: bool = False,
+) -> List[ShardedPlacement]:
+    """Map every linear of ``cfg`` onto the mesh (``map_model`` per chip-shard,
+    round-robin array offsets preserved across layers).
+
+    Example::
+
+        >>> from repro.configs.registry import get_config
+        >>> from repro.fabric import ChipMeshConfig, FabricConfig, shard_model
+        >>> cm = ChipMeshConfig(model=4, fabric=FabricConfig(mode="hybrid", n_arrays=60))
+        >>> sps = shard_model(get_config("smollm-135m"), cm, tokens=4, block_only=True)
+        >>> len(sps), sps[0].k_splits
+        (7, 4)
+    """
+    out: List[ShardedPlacement] = []
+    offset = 0
+    for name, m, k, n in model_matmuls(cfg, tokens, block_only=block_only):
+        p = map_matmul(name, m, k, n, chip_mesh.fabric, cim=cim)
+        sp = shard_placement(p, chip_mesh, array_offset=offset)
+        offset = (offset + sp.chip.n_weight_tiles) % chip_mesh.fabric.n_compute_arrays
+        out.append(sp)
+    return out
+
+
+def execute_sharded_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    chip_mesh: ChipMeshConfig,
+    cim: CiMConfig,
+    sharded: Optional[ShardedPlacement] = None,
+    key: Optional[jax.Array] = None,
+    return_stats: bool = False,
+):
+    """``y = x @ w`` executed shard-wise over the chip mesh.
+
+    Quantization scales are global (fabric-level calibration), so every chip
+    computes integer partial product-sums over its own K-slice and the
+    reduce-scatter combine is a plain digital sum — on a 1x1 mesh the
+    operation sequence is identical to ``fabric.execute.execute_matmul`` and
+    the result is bit-for-bit equal (bitplane and fake_quant, noiseless ADC).
+
+    ``x``: (..., K); ``w``: (K, N). Per-chip shards run through the same
+    ``core.cim_linear`` per-plane machinery as the single-chip path; the
+    Pallas kernel path is not used here because it re-derives quantization
+    scales per call, which would differ per K-slice.
+
+    Example::
+
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.core.cim_linear import CiMConfig
+        >>> from repro.fabric import ChipMeshConfig, FabricConfig, execute_sharded_matmul
+        >>> cm = ChipMeshConfig(model=2, fabric=FabricConfig(mode="pair_sar", n_arrays=8))
+        >>> cim = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+        >>> x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+        >>> w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+        >>> execute_sharded_matmul(x, w, cm, cim).shape
+        (4, 32)
+    """
+    if cim.mode not in ("bitplane", "fake_quant"):
+        raise ValueError(f"fabric execution needs bitplane|fake_quant, got {cim.mode!r}")
+    fabric = chip_mesh.fabric
+    batch_shape = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[1]
+    xm = x.reshape(-1, k)
+    if sharded is None:
+        base = map_matmul("matmul", xm.shape[0], k, n, fabric, cim=cim)
+        sharded = shard_placement(base, chip_mesh)
+    if sharded.chip_mesh != chip_mesh:
+        raise ValueError("sharded placement was planned on a different ChipMeshConfig")
+    if (sharded.k, sharded.n) != (k, n):
+        raise ValueError(
+            f"sharded placement is for K={sharded.k},N={sharded.n}; got K={k},N={n}"
+        )
+    k_splits, d_splits = sharded.k_splits, sharded.d_splits
+    k_tiles = math.ceil(k / fabric.rows)
+    n_tiles = math.ceil(n / fabric.cols)
+    cols = fabric.cols
+
+    # fabric-level quantization: global scales, exactly the unsharded front-end
+    x_int, sx = quantize_symmetric(xm, cim.a_bits, cim.a_signed)
+    w_int, sw = quantize_symmetric(w, cim.w_bits, cim.w_signed, per_axis=-1)
+
+    m_total = xm.shape[0]
+    m_shard = m_total // d_splits if d_splits > 1 else m_total
+    conversions = jnp.zeros((), jnp.int32)
+    comparisons = jnp.zeros((), jnp.int32)
+    data_parts = []
+    for d in range(d_splits):
+        m0 = d * m_shard
+        m1 = (d + 1) * m_shard if d < d_splits - 1 else m_total
+        x_d = x_int[m0:m1]
+        parts = []
+        for nt in range(n_tiles):
+            n0, n1 = nt * cols, min((nt + 1) * cols, n)
+            w_tile = w_int[:, n0:n1]
+            total = None
+            for c in range(k_splits):
+                k0, k1 = _k_slice(k, fabric.rows, k_tiles, k_splits, c)
+                if cim.mode == "bitplane":
+                    # chip 0's tile keys coincide with the unsharded path's,
+                    # so a 1x1 mesh reproduces its noise draws exactly
+                    tkey = (
+                        jax.random.fold_in(key, (d * k_splits + c) * n_tiles + nt)
+                        if key is not None
+                        else None
+                    )
+                    y_c, st = _bitplane_matmul(x_d[:, k0:k1], w_tile[k0:k1], cim, tkey)
+                    conversions = conversions + st.conversions
+                    comparisons = comparisons + st.comparisons
+                else:
+                    y_c, _ = _fake_quant_matmul(x_d[:, k0:k1], w_tile[k0:k1], cim)
+                # digital partial-sum combine == the reduce-scatter's sum
+                total = y_c if total is None else total + y_c
+            parts.append(total * sx * sw[:, n0:n1])
+        data_parts.append(jnp.concatenate(parts, axis=1))
+    y_q = jnp.concatenate(data_parts, axis=0)
+
+    if cim.ste:
+        y_lin = xm @ w
+        y_q = y_lin + jax.lax.stop_gradient(y_q - y_lin)
+
+    y = y_q.reshape(*batch_shape, n)
+    if return_stats:
+        return y, CimStats(conversions, comparisons)
+    return y

@@ -31,7 +31,13 @@ from typing import Optional
 
 from repro.core.energy_area import area_um2
 
-__all__ = ["FabricConfig", "arrays_for_area", "MODES", "BITCELL_UM2_65NM"]
+__all__ = [
+    "FabricConfig",
+    "ChipMeshConfig",
+    "arrays_for_area",
+    "MODES",
+    "BITCELL_UM2_65NM",
+]
 
 MODES = ("pair_sar", "flash", "hybrid", "conventional_sar", "conventional_flash")
 
@@ -46,7 +52,19 @@ EMA_PJ_PER_BIT = 10.0
 
 @dataclasses.dataclass(frozen=True)
 class FabricConfig:
-    """Static description of one chip-level CiM fabric."""
+    """Static description of one chip-level CiM fabric.
+
+    A grid of ``rows x cols`` bit-plane CiM arrays partitioned into
+    digitization groups under one networking ``mode`` (see module docstring);
+    sized either by an explicit ``n_arrays`` or an ``area_budget_um2``
+    (whole groups only).
+
+    Example::
+
+        >>> fb = FabricConfig(mode="hybrid", adc_bits=5, flash_bits=2, n_arrays=64)
+        >>> fb.group_size, fb.resolved_n_arrays(), fb.n_compute_arrays
+        (6, 60, 30)
+    """
 
     mode: str = "hybrid"
     rows: int = 16  # word lines per array (reduction-tile size)
@@ -176,7 +194,74 @@ class FabricConfig:
 
 
 def arrays_for_area(budget_um2: float, fabric: FabricConfig) -> int:
-    """How many arrays (whole groups) of this fabric style fit in a budget."""
+    """How many arrays (whole groups) of this fabric style fit in a budget.
+
+    Example::
+
+        >>> fb = FabricConfig(mode="pair_sar", n_arrays=2)
+        >>> arrays_for_area(10 * fb.per_array_area_um2, fb)
+        10
+    """
     return dataclasses.replace(
         fabric, n_arrays=None, area_budget_um2=budget_um2
     ).resolved_n_arrays()
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipMeshConfig:
+    """A mesh of identical CiM chips the fabric shards across.
+
+    Two named axes mirror :func:`repro.launch.mesh.make_chip_mesh` (and the
+    production training/serving meshes): ``model`` chips split a layer's
+    K-parallel reduction tiles and combine their partial product-sums with a
+    reduce-scatter over the inter-chip links; ``data`` chips replicate the
+    weights and split the batch. ``fabric`` describes every chip (one
+    :class:`FabricConfig`), so chip-local area/energy/latency roll up
+    unchanged while the link parameters price the new cross-chip traffic
+    that ``fabric.report`` reports separately from on-chip EMA.
+
+    Example::
+
+        >>> cm = ChipMeshConfig(data=2, model=2, fabric=FabricConfig(mode="hybrid"))
+        >>> cm.n_chips
+        4
+        >>> cm.mesh().axis_names
+        ('data', 'model')
+    """
+
+    data: int = 1  # batch-parallel chips (weights replicated)
+    model: int = 1  # K-parallel chips (partial sums reduce-scattered)
+    fabric: FabricConfig = FabricConfig()
+    link_bits_per_s: float = 32e9  # per-chip inter-chip link bandwidth
+    link_pj_per_bit: float = 1.0  # SerDes-class link energy
+    psum_bits: int = 24  # partial-sum word width on the links
+
+    def __post_init__(self):
+        if self.data < 1 or self.model < 1:
+            raise ValueError(
+                f"mesh axes must be >= 1, got data={self.data}, model={self.model}"
+            )
+        if self.psum_bits < 1:
+            raise ValueError("psum_bits must be >= 1")
+
+    @property
+    def n_chips(self) -> int:
+        return self.data * self.model
+
+    @property
+    def shape(self) -> tuple:
+        return (self.data, self.model)
+
+    def mesh(self):
+        """The jax ``(data, model)`` mesh (abstract when devices are scarce)."""
+        from repro.launch.mesh import make_chip_mesh
+
+        return make_chip_mesh(self.data, self.model)
+
+    def total_area_um2(self) -> float:
+        return self.n_chips * self.fabric.chip_area_um2()
+
+    def total_weight_capacity_bits(self) -> int:
+        """Distinct weight bits the mesh can hold resident: ``model`` chips
+        hold different K-slices, ``data`` chips hold copies."""
+        return self.model * self.fabric.weight_capacity_bits()

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_chip_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,3 +19,27 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh():
     """Degenerate 1x1 mesh over the local device (smoke tests / examples)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_chip_mesh(data: int = 1, model: int = 1):
+    """``(data, model)`` mesh for the multi-chip CiM fabric (``fabric.shard``).
+
+    Returns a concrete device mesh when the host has ``data * model`` jax
+    devices, otherwise an :class:`jax.sharding.AbstractMesh` of the same shape
+    — the planning paths (``shardings.spec_for`` divisibility checks, traffic
+    models) only read ``shape`` / ``axis_names``, so a 16-chip fabric can be
+    sized and swept on a single-device host.
+
+    Example::
+
+        >>> mesh = make_chip_mesh(data=2, model=2)
+        >>> dict(mesh.shape)
+        {'data': 2, 'model': 2}
+    """
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got data={data}, model={model}")
+    if len(jax.devices()) >= data * model:
+        return jax.make_mesh((data, model), ("data", "model"))
+    from jax.sharding import AbstractMesh
+
+    return AbstractMesh((("data", data), ("model", model)))

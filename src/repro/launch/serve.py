@@ -37,8 +37,20 @@ class ServeSettings:
     greedy: bool = True
 
 
-def serve_batch(cfg: ModelConfig, st: ServeSettings, prompts: Optional[np.ndarray] = None):
-    """Serve one static batch: returns dict with tokens + timing."""
+def serve_batch(
+    cfg: ModelConfig,
+    st: ServeSettings,
+    prompts: Optional[np.ndarray] = None,
+    fabric_rollup: Optional[dict] = None,
+):
+    """Serve one static batch: returns dict with tokens + timing.
+
+    ``fabric_rollup`` (a ``fabric_report`` / ``sharded_fabric_report`` dict
+    for ONE forward pass) turns the batching log line into a per-request cost
+    model: estimated CiM latency / energy / EMA per request are printed with
+    the batch and folded into the returned dict — the first step of
+    fabric-aware batching decisions (ROADMAP).
+    """
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(st.seed))
     rng = np.random.default_rng(st.seed)
@@ -67,13 +79,44 @@ def serve_batch(cfg: ModelConfig, st: ServeSettings, prompts: Optional[np.ndarra
     t_decode = time.time() - t0
 
     gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
-    return {
+    out = {
         "prompts": prompts,
         "generated": gen,
         "prefill_s": t_prefill,
         "decode_s": t_decode,
         "decode_tok_s": b * (st.gen_len - 1) / max(t_decode, 1e-9),
     }
+    if fabric_rollup is not None:
+        t = fabric_rollup["totals"]
+        # the rollup maps one batched forward pass (tokens = batch); prefill
+        # runs s token positions, decode gen_len - 1 more, so a request costs
+        # (s + gen_len - 1) passes shared across the b requests of the batch
+        passes = (s + st.gen_len - 1) / b
+        xchip_bits = t.get("crosschip_bits_per_pass", 0)
+        fab = {
+            "latency_s_per_request": t["latency_s"] * passes,
+            "energy_uj_per_request": (
+                t["digitization_energy_pj"]
+                + t["ema_energy_pj"]
+                + t.get("crosschip_energy_pj", 0.0)
+            )
+            * passes
+            / 1e6,
+            "onchip_ema_bits_per_request": t["ema_bits_per_pass"] * passes,
+            "crosschip_bits_per_request": xchip_bits * passes,
+            "model_resident": t["model_resident"],
+            "n_chips": fabric_rollup.get("mesh", {}).get("n_chips", 1),
+        }
+        out["fabric"] = fab
+        print(
+            f"[serve] batch {b}x{total} tok on {fab['n_chips']} chip(s): est. "
+            f"{fab['latency_s_per_request']*1e3:.3g} ms, "
+            f"{fab['energy_uj_per_request']:.3g} uJ per request "
+            f"(on-chip EMA {fab['onchip_ema_bits_per_request']:.3g} bits, "
+            f"cross-chip {fab['crosschip_bits_per_request']:.3g} bits, "
+            f"{'resident' if fab['model_resident'] else 'reloading'})"
+        )
+    return out
 
 
 def main():
@@ -92,6 +135,14 @@ def main():
         "area/energy/latency/EMA rollup (repro.fabric)",
     )
     ap.add_argument("--fabric-arrays", type=int, default=256)
+    ap.add_argument(
+        "--fabric-chips",
+        type=int,
+        default=1,
+        choices=[1, 4, 16],
+        help="shard the mapped fabric across a (data x model) chip mesh "
+        "(1 -> 1x1, 4 -> 2x2, 16 -> 4x4; repro.fabric.shard)",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -102,7 +153,33 @@ def main():
 
         cfg = dc.replace(cfg, cim=CiMConfig(mode=args.cim, ste=False))
     st = ServeSettings(batch=args.batch, prompt_len=args.prompt_len, gen_len=args.gen_len)
-    out = serve_batch(cfg, st)
+
+    if args.fabric_chips > 1 and not args.fabric:
+        ap.error("--fabric-chips requires --fabric")
+    rollup = None
+    if args.fabric:
+        # map (and optionally shard) BEFORE serving so the batching log line
+        # carries the per-request fabric cost, not just a post-hoc printout;
+        # one mapped pass covers the whole lock-step batch (tokens = batch),
+        # which is what lets the mesh's data axis actually split work
+        from repro.fabric import (
+            ChipMeshConfig,
+            FabricConfig,
+            fabric_report,
+            map_model,
+            shard_model,
+            sharded_fabric_report,
+        )
+
+        fb = FabricConfig(mode=args.fabric, n_arrays=args.fabric_arrays)
+        if args.fabric_chips > 1:
+            side = {4: 2, 16: 4}[args.fabric_chips]
+            cm = ChipMeshConfig(data=side, model=side, fabric=fb)
+            rollup = sharded_fabric_report(shard_model(cfg, cm, tokens=st.batch), cm)
+        else:
+            rollup = fabric_report(map_model(cfg, fb, tokens=st.batch), fb)
+
+    out = serve_batch(cfg, st, fabric_rollup=rollup)
     print(
         f"[serve] {args.arch}: prefill {out['prefill_s']*1e3:.1f} ms, "
         f"decode {out['decode_tok_s']:.1f} tok/s "
@@ -110,13 +187,11 @@ def main():
     )
     print("[serve] sample generation:", out["generated"][0][:16].tolist())
 
-    if args.fabric:
-        from repro.fabric import FabricConfig, fabric_report, map_model, render_markdown
+    if rollup is not None:
+        from repro.fabric import render_markdown
 
-        fb = FabricConfig(mode=args.fabric, n_arrays=args.fabric_arrays)
-        placements = map_model(cfg, fb, tokens=1)
         print()
-        print(render_markdown(fabric_report(placements, fb)))
+        print(render_markdown(rollup))
 
 
 if __name__ == "__main__":

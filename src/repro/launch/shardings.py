@@ -21,6 +21,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "logical_to_mesh",
     "spec_for",
+    "axes_size",
     "sharding_for",
     "param_shardings",
     "batch_shardings",
@@ -37,8 +38,12 @@ def logical_to_mesh(mesh: Mesh) -> dict[str, tuple[str, ...]]:
     return {"tp": ("model",), "fsdp": dp, "dp": dp}
 
 
-def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+def axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    """Product of the named mesh-axis sizes (also used by ``fabric.shard``)."""
     return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+_axes_size = axes_size
 
 
 def spec_for(

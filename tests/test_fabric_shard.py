@@ -1,0 +1,221 @@
+"""Multi-chip fabric sharding: mesh planning, divisibility fallbacks,
+sharded execution numerics, and the cross-chip traffic rollup."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.cim_linear import CiMConfig
+from repro.fabric import (
+    ChipMeshConfig,
+    FabricConfig,
+    execute_matmul,
+    execute_sharded_matmul,
+    map_matmul,
+    render_markdown,
+    shard_model,
+    shard_placement,
+    sharded_fabric_report,
+)
+from repro.configs.registry import get_config
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_chip_mesh
+
+
+FB = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+CIM_BP = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+
+
+# ---------------------------------------------------------------------------
+# mesh + config plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_chip_mesh_config_basics():
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    assert cm.n_chips == 4 and cm.shape == (2, 2)
+    assert cm.total_area_um2() == pytest.approx(4 * FB.chip_area_um2())
+    # model chips hold distinct K-slices; data chips hold copies
+    assert cm.total_weight_capacity_bits() == 2 * FB.weight_capacity_bits()
+    with pytest.raises(ValueError):
+        ChipMeshConfig(data=0)
+    with pytest.raises(ValueError):
+        ChipMeshConfig(psum_bits=0)
+
+
+def test_make_chip_mesh_abstract_fallback():
+    """Meshes bigger than the host's devices still plan (AbstractMesh)."""
+    mesh = make_chip_mesh(data=4, model=4)
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape["data"] == 4 and mesh.shape["model"] == 4
+    # spec_for works against it — the planning contract fabric.shard relies on
+    assert sh.spec_for(mesh, (16, 8), ("tp", "dp"), "t") is not None
+
+
+# ---------------------------------------------------------------------------
+# shard planning: K-splits and fallbacks
+# ---------------------------------------------------------------------------
+
+
+def test_shard_k_split_divides():
+    # 64/16 = 4 K-tiles over model=4 -> 1 tile per chip, batch 4 over data=2
+    cm = ChipMeshConfig(data=2, model=4, fabric=FB)
+    sp = shard_placement(map_matmul("l", 4, 64, 64, FB), cm)
+    assert sp.k_splits == 4 and sp.d_splits == 2
+    assert sp.chip.k_tiles == 1 and sp.chip.k == 16
+    assert sp.chip.m == 2
+    assert not sp.fallbacks
+    assert sp.n_chips_active == 8
+
+
+def test_shard_fallback_recorded_when_tiles_dont_divide():
+    # k=40 -> 3 K-tiles, not divisible by model=2 -> replicate + record
+    cm = ChipMeshConfig(model=2, fabric=FB)
+    sp = shard_placement(map_matmul("odd", 4, 40, 64, FB), cm)
+    assert sp.k_splits == 1
+    assert len(sp.fallbacks) == 1 and "odd" in sp.fallbacks[0]
+    assert sp.crosschip_bits_per_pass == 0  # replicated -> no reduce-scatter
+    # batch fallback: m=3 not divisible by data=2
+    sp2 = shard_placement(map_matmul("oddm", 3, 64, 64, FB), ChipMeshConfig(data=2, fabric=FB))
+    assert sp2.d_splits == 1 and len(sp2.fallbacks) == 1
+
+
+def test_shard_rejects_mismatched_fabric():
+    other = FabricConfig(mode="hybrid", n_arrays=12)
+    with pytest.raises(ValueError):
+        shard_placement(map_matmul("l", 4, 64, 64, other), ChipMeshConfig(fabric=FB))
+
+
+def test_shard_crosschip_traffic_model():
+    cm = ChipMeshConfig(data=2, model=4, fabric=FB, psum_bits=24)
+    sp = shard_placement(map_matmul("l", 4, 64, 64, FB), cm)
+    # ring reduce-scatter: (C-1) * M * N * psum_bits in total
+    assert sp.crosschip_bits_per_pass == 3 * 4 * 64 * 24
+    assert sp.crosschip_energy_pj == pytest.approx(
+        sp.crosschip_bits_per_pass * cm.link_pj_per_bit
+    )
+    assert sp.crosschip_latency_s > 0
+    # single chip on the model axis -> zero cross-chip EMA
+    sp1 = shard_placement(map_matmul("l", 4, 64, 64, FB), ChipMeshConfig(fabric=FB))
+    assert sp1.crosschip_bits_per_pass == 0 and sp1.crosschip_latency_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# execution: 1x1 bit-exact, multi-chip equivalent
+# ---------------------------------------------------------------------------
+
+
+def test_execute_sharded_1x1_bit_exact_bitplane():
+    """A 1x1-mesh sharded run performs the identical operation sequence to
+    the unsharded fabric.execute path — bit-for-bit equal."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 48))
+    y_shard = execute_sharded_matmul(x, w, ChipMeshConfig(fabric=FB), CIM_BP)
+    y_ref = execute_matmul(x, w, FB, CIM_BP)
+    assert (np.asarray(y_shard) == np.asarray(y_ref)).all()
+
+
+def test_execute_sharded_1x1_bit_exact_with_noise_key():
+    """Chip 0's per-tile noise keys coincide with the unsharded path's."""
+    cim = CiMConfig(
+        mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False,
+        comparator_sigma=0.05,
+    )
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (4, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 48))
+    nk = jax.random.PRNGKey(7)
+    y_shard = execute_sharded_matmul(x, w, ChipMeshConfig(fabric=FB), cim, key=nk)
+    y_ref = execute_matmul(x, w, FB, cim, key=nk)
+    assert (np.asarray(y_shard) == np.asarray(y_ref)).all()
+
+
+@pytest.mark.parametrize("data,model", [(1, 2), (2, 1), (2, 2)])
+def test_execute_sharded_multi_chip_matches_unsharded(data, model):
+    """Global quantization scales + tile-boundary K-splits: the digital
+    partial-sum combine reproduces the unsharded result (noiseless ADC)."""
+    cm = ChipMeshConfig(data=data, model=model, fabric=FB)
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (2, 2, 64))  # batched leading dims
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 48))
+    y_shard = execute_sharded_matmul(x, w, cm, CIM_BP)
+    y_ref = execute_matmul(x, w, FB, CIM_BP)
+    assert y_shard.shape == y_ref.shape == (2, 2, 48)
+    np.testing.assert_allclose(np.asarray(y_shard), np.asarray(y_ref), atol=1e-4, rtol=1e-5)
+
+
+def test_execute_sharded_fake_quant_and_stats():
+    cim = CiMConfig(mode="fake_quant", a_bits=8, w_bits=8, adc_bits=5, rows=16, ste=False)
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (4, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 48))
+    y_shard = execute_sharded_matmul(x, w, cm, cim)
+    y_ref = execute_matmul(x, w, FB, cim, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y_shard), np.asarray(y_ref), atol=1e-4, rtol=1e-5)
+    # bitplane stats: conversions across the mesh equal the unsharded count
+    y, st = execute_sharded_matmul(x, w, cm, CIM_BP, return_stats=True)
+    _, st_ref = execute_matmul(x, w, FB, CIM_BP, return_stats=True)
+    assert int(st.conversions) == int(st_ref.conversions)
+
+
+def test_execute_sharded_rejects_bad_mode_and_shape():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 48))
+    cm = ChipMeshConfig(fabric=FB)
+    with pytest.raises(ValueError):
+        execute_sharded_matmul(x, w, cm, CiMConfig(mode="exact"))
+    sp = shard_placement(map_matmul("l", 4, 32, 48, FB), cm)
+    with pytest.raises(ValueError):
+        execute_sharded_matmul(x, w, cm, CIM_BP, sharded=sp)
+    # a plan from a different mesh must not silently mis-slice K
+    sp_ok = shard_placement(map_matmul("l", 4, 64, 48, FB), cm)
+    other_mesh = ChipMeshConfig(fabric=FabricConfig(mode="pair_sar", rows=32, cols=32, n_arrays=8))
+    with pytest.raises(ValueError):
+        execute_sharded_matmul(x, w, other_mesh, CIM_BP, sharded=sp_ok)
+
+
+# ---------------------------------------------------------------------------
+# report: on-chip EMA vs cross-chip traffic
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_report_single_chip_has_zero_crosschip_ema():
+    cm = ChipMeshConfig(fabric=FabricConfig(mode="hybrid", n_arrays=60))
+    sps = shard_model(get_config("smollm-135m"), cm, tokens=4, block_only=True)
+    rep = sharded_fabric_report(sps, cm)
+    assert rep["mesh"]["n_chips"] == 1
+    assert rep["totals"]["crosschip_bits_per_pass"] == 0
+    assert rep["totals"]["crosschip_energy_pj"] == 0.0
+    # single-chip mesh rows match the unsharded per-chip accounting
+    for r in rep["layers"]:
+        assert r["k_splits"] == 1 and r["d_splits"] == 1
+
+
+def test_sharded_report_mesh_separates_traffic_and_gains_residency():
+    cfg = get_config("smollm-135m")
+    fb = FabricConfig(mode="hybrid", n_arrays=252)
+    one = ChipMeshConfig(fabric=fb)
+    big = ChipMeshConfig(data=2, model=2, fabric=fb)
+    rep1 = sharded_fabric_report(shard_model(cfg, one, tokens=4, block_only=True), one)
+    rep4 = sharded_fabric_report(shard_model(cfg, big, tokens=4, block_only=True), big)
+    # cross-chip traffic appears only on the mesh, priced separately from EMA
+    assert rep4["totals"]["crosschip_bits_per_pass"] > 0
+    assert rep4["totals"]["ema_bits_per_pass"] > 0
+    # K-sharding shrinks every chip's tile load toward residency
+    assert rep4["totals"]["tiles_per_chip"] < rep1["totals"]["tiles_per_chip"]
+    # markdown shows the mesh header and the traffic column
+    md = render_markdown(rep4)
+    assert "cross-chip reduce-scatter" in md and "KxD split" in md
+    assert "2x2 (data x model) = 4 chips" in md
+
+
+def test_sharded_report_totals_consistency():
+    cm = ChipMeshConfig(data=2, model=2, fabric=FabricConfig(mode="pair_sar", n_arrays=64))
+    sps = [shard_placement(map_matmul(f"l{i}", 4, 64, 256, cm.fabric), cm) for i in range(3)]
+    rep = sharded_fabric_report(sps, cm)
+    assert rep["totals"]["crosschip_bits_per_pass"] == sum(
+        sp.crosschip_bits_per_pass for sp in sps
+    )
+    assert rep["totals"]["conversions"] == sum(r["conversions"] for r in rep["layers"])

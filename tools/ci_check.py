@@ -1,18 +1,25 @@
-"""CI gate: tier-1 tests + the <30 s fabric smoke benchmark.
+"""CI gate: tier-1 tests + <30 s fabric smoke benchmarks + docs checks.
 
-Runs the repo's tier-1 suite (ROADMAP.md), then the fabric design-space
-sweep, and writes ``BENCH_fabric.json`` so successive PRs accumulate a
-perf trajectory. Exits non-zero if either stage fails or the smoke
-benchmark blows its time budget.
+Runs the repo's tier-1 suite (ROADMAP.md), the fabric design-space sweep
+(``BENCH_fabric.json``), the multi-chip shard smoke — a local 1x1-mesh
+bit-exactness check plus the 1/4/16-chip mesh sweep, written to
+``BENCH_fabric_shard.json`` — and the docs gate: ``README.md`` and
+``docs/fabric.md`` must exist, every dotted ``repro.*`` reference in them
+must import, and every ``repro.fabric`` public symbol must be documented in
+``docs/fabric.md``. Exits non-zero if any stage fails or a smoke benchmark
+blows its time budget.
 
   python tools/ci_check.py [--skip-tests] [--out BENCH_fabric.json]
+                           [--shard-out BENCH_fabric_shard.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import os
+import re
 import subprocess
 import sys
 import time
@@ -39,6 +46,8 @@ def run_fabric_smoke(out: Path) -> bool:
     from benchmarks.fabric_sweep import fabric_mapping_smoke, sweep_points
 
     t0 = time.perf_counter()
+    # same payload schema as `python -m benchmarks.fabric_sweep` (both write
+    # this tracked file); shard data lives ONLY in BENCH_fabric_shard.json
     payload = {"sweep": sweep_points(), "smoke": fabric_mapping_smoke()}
     wall = time.perf_counter() - t0
     payload["wall_s"] = wall
@@ -56,10 +65,105 @@ def run_fabric_smoke(out: Path) -> bool:
     return True
 
 
+def run_shard_smoke(out: Path) -> bool:
+    """Multi-chip smoke: 1x1-mesh bit-exactness + the 1/4/16-chip sweep."""
+    sys.path.insert(0, str(REPO / "src"))
+    sys.path.insert(0, str(REPO))
+    import jax
+    import numpy as np
+
+    from benchmarks.fabric_sweep import shard_sweep_points
+    from repro.core.cim_linear import CiMConfig
+    from repro.fabric import (
+        ChipMeshConfig,
+        FabricConfig,
+        execute_matmul,
+        execute_sharded_matmul,
+    )
+
+    t0 = time.perf_counter()
+    fb = FabricConfig(mode="hybrid", rows=16, cols=32, n_arrays=12)
+    cim = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 48))
+    y_shard = execute_sharded_matmul(x, w, ChipMeshConfig(fabric=fb), cim)
+    y_ref = execute_matmul(x, w, fb, cim)
+    bit_exact = bool((np.asarray(y_shard) == np.asarray(y_ref)).all())
+
+    payload = {"bit_exact_1x1": bit_exact, "shard_sweep": shard_sweep_points()}
+    wall = time.perf_counter() - t0
+    payload["wall_s"] = wall
+    out.write_text(json.dumps(payload, indent=2, default=float))
+    print(f"[ci_check] shard smoke: {len(payload['shard_sweep'])} mesh points in "
+          f"{wall:.1f}s -> {out}")
+    if not bit_exact:
+        print("[ci_check] FAIL: 1x1-mesh sharded execution is not bit-exact")
+        return False
+    if wall > SMOKE_BUDGET_S:
+        print(f"[ci_check] FAIL: shard smoke took {wall:.1f}s > {SMOKE_BUDGET_S}s budget")
+        return False
+    xchip = {p["n_chips"]: p["crosschip_bits_per_pass"] for p in payload["shard_sweep"]}
+    if xchip.get(1, 1) != 0:
+        print(f"[ci_check] FAIL: single-chip mesh reports cross-chip traffic: {xchip}")
+        return False
+    if not all(bits > 0 for chips, bits in xchip.items() if chips > 1):
+        print(f"[ci_check] FAIL: multi-chip mesh reports no reduce-scatter traffic: {xchip}")
+        return False
+    return True
+
+
+def _resolve_dotted(ref: str) -> bool:
+    """Import ``repro.a.b.C`` — module prefix via importlib, rest via getattr."""
+    parts = ref.split(".")
+    for split in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:split]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[split:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def check_docs() -> bool:
+    """README.md / docs/fabric.md exist and reference only live symbols."""
+    sys.path.insert(0, str(REPO / "src"))
+    import repro.fabric as fabric
+
+    ok = True
+    docs = {"README.md": REPO / "README.md", "docs/fabric.md": REPO / "docs" / "fabric.md"}
+    for name, path in docs.items():
+        if not path.is_file():
+            print(f"[ci_check] FAIL: {name} is missing")
+            ok = False
+    if not ok:
+        return False
+    for name, path in docs.items():
+        text = path.read_text()
+        for ref in sorted(set(re.findall(r"\brepro(?:\.\w+)+", text))):
+            if not _resolve_dotted(ref):
+                print(f"[ci_check] FAIL: {name} references {ref}, which does not import")
+                ok = False
+    fabric_doc = docs["docs/fabric.md"].read_text()
+    for sym in fabric.__all__:
+        if sym not in fabric_doc:
+            print(f"[ci_check] FAIL: docs/fabric.md does not document repro.fabric.{sym}")
+            ok = False
+    if ok:
+        print("[ci_check] docs: README.md + docs/fabric.md present, all references live")
+    return ok
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-tests", action="store_true")
     ap.add_argument("--out", default=str(REPO / "BENCH_fabric.json"))
+    ap.add_argument("--shard-out", default=str(REPO / "BENCH_fabric_shard.json"))
     args = ap.parse_args()
 
     ok = True
@@ -69,6 +173,10 @@ def main():
         print(f"[ci_check] tier-1: {'PASS' if ok else 'FAIL'}")
     if ok:
         ok = run_fabric_smoke(Path(args.out))
+    if ok:
+        ok = run_shard_smoke(Path(args.shard_out))
+    if ok:
+        ok = check_docs()
     raise SystemExit(0 if ok else 1)
 
 
