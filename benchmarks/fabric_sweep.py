@@ -5,11 +5,15 @@ conversions/cycle, throughput/mm^2, energy/conversion, and the iso-area
 ratios against the conventional-ADC baseline — so successive PRs can track
 the chip-level trajectory. ``shard_sweep_points`` extends the sweep across
 1- / 4- / 16-chip meshes (``repro.fabric.shard``), reporting per-layer
-on-chip EMA vs cross-chip reduce-scatter traffic. Doubles as the ``fabric``
-entry of ``benchmarks/run.py`` and the <30 s smoke benchmark of
-``tools/ci_check.py``.
+on-chip EMA vs cross-chip reduce-scatter traffic; ``shard_backend_smoke``
+executes the sharded matmul numerically through both chip backends
+(sequential host loop vs real multi-device ``shard_map``) and compares.
+Doubles as the ``fabric`` entry of ``benchmarks/run.py`` and the <30 s smoke
+benchmark of ``tools/ci_check.py``.
 
   PYTHONPATH=src python -m benchmarks.fabric_sweep [--out BENCH_fabric.json]
+  PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m benchmarks.fabric_sweep --backend-smoke
 """
 
 from __future__ import annotations
@@ -93,6 +97,7 @@ def shard_sweep_points(
                 "tiles_per_chip": t["tiles_per_chip"],
                 "model_resident": t["model_resident"],
                 "latency_s": t["latency_s"],
+                "latency_s_overlapped": t["latency_s_overlapped"],
                 "onchip_ema_bits_per_pass": t["ema_bits_per_pass"],
                 "crosschip_bits_per_pass": t["crosschip_bits_per_pass"],
                 "crosschip_energy_pj": t["crosschip_energy_pj"],
@@ -110,6 +115,77 @@ def shard_sweep_points(
             }
         )
     return points
+
+
+def shard_backend_smoke(meshes=((1, 1), (2, 2))) -> dict:
+    """Numeric backend smoke: execute the same sharded matmul through the
+    sequential and shard_map backends and compare.
+
+    Meant to run with forced host devices (``tools/ci_check.py`` launches it
+    in a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    via ``python -m benchmarks.fabric_sweep --backend-smoke``); on a
+    single-device host the shard_map points simply resolve to sequential and
+    are reported as such.
+    """
+    import jax
+    import numpy as np
+
+    from repro.core.cim_linear import CiMConfig
+    from repro.fabric import (
+        ChipMeshConfig,
+        FabricConfig,
+        execute_matmul,
+        execute_sharded_matmul,
+        map_matmul,
+        resolve_backend,
+        shard_placement,
+    )
+
+    fb = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+    noisy = CiMConfig(
+        mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False,
+        comparator_sigma=0.05,
+    )
+    key = jax.random.PRNGKey(0)
+    nk = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (4, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 48))
+
+    out = {"devices": len(jax.devices()), "points": []}
+    for data, model in meshes:
+        cm = ChipMeshConfig(data=data, model=model, fabric=fb)
+        sp = shard_placement(map_matmul("matmul", 4, 64, 48, fb), cm)
+        try:  # auto keeps 1x1 sequential; probe explicit shard_map eligibility
+            resolve_backend(sp, "shard_map")
+            shard_map_available = True
+        except ValueError:
+            shard_map_available = False
+        t0 = time.perf_counter()
+        y_seq = np.asarray(
+            execute_sharded_matmul(x, w, cm, noisy, sharded=sp, key=nk,
+                                   backend="sequential")
+        )
+        t_seq = time.perf_counter() - t0
+        rec = {
+            "mesh": f"{data}x{model}",
+            "backend_auto": resolve_backend(sp, "auto"),
+            "shard_map_available": shard_map_available,
+            "sequential_s": t_seq,
+            "crosschip_bits_per_pass": sp.crosschip_bits_per_pass,
+        }
+        if shard_map_available:
+            t0 = time.perf_counter()
+            y_sm = np.asarray(
+                execute_sharded_matmul(x, w, cm, noisy, sharded=sp, key=nk,
+                                       backend="shard_map")
+            )
+            rec["shard_map_s"] = time.perf_counter() - t0
+            rec["max_abs_diff_vs_sequential"] = float(np.abs(y_sm - y_seq).max())
+            if (data, model) == (1, 1):
+                y_ref = np.asarray(execute_matmul(x, w, fb, noisy, key=nk))
+                rec["bit_exact_1x1_vs_execute"] = bool((y_sm == y_ref).all())
+        out["points"].append(rec)
+    return out
 
 
 def fabric_mapping_smoke() -> dict:
@@ -175,7 +251,16 @@ def fabric_bench() -> list[tuple]:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_fabric.json")
+    ap.add_argument(
+        "--backend-smoke",
+        action="store_true",
+        help="print the shard_backend_smoke() JSON to stdout and exit "
+        "(tools/ci_check.py runs this in a forced-8-device subprocess)",
+    )
     args = ap.parse_args()
+    if args.backend_smoke:
+        print(json.dumps(shard_backend_smoke(), indent=2, default=float))
+        return
     t0 = time.perf_counter()
     # shard-sweep data is written by tools/ci_check.py to BENCH_fabric_shard.json
     # (single source of truth); here it only feeds the run.py bench rows

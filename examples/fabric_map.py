@@ -86,8 +86,21 @@ def main():
     print(f"[shard]      1x1-mesh sharded q_proj == unsharded execute: {exact}")
     assert exact, "1x1-mesh sharded bitplane output diverged"
 
+    # execution backends: the 1x1 mesh fits any host, so the REAL shard_map
+    # device-mesh path must also be bit-exact vs the unsharded executor
+    y_sm = np.asarray(execute_sharded_matmul(x, w_q, cm1, cim_bp, backend="shard_map"))
+    exact = bool((y_sm == y_un).all())
+    print(f"[shard]      1x1 shard_map backend == unsharded execute: {exact}")
+    assert exact, "1x1 shard_map backend output diverged"
+
     cm4 = ChipMeshConfig(data=2, model=2, fabric=fabric)
-    rep4 = sharded_fabric_report(shard_model(cfg, cm4, tokens=4, block_only=True), cm4)
+    sps4 = shard_model(cfg, cm4, tokens=4, block_only=True)
+    from repro.fabric import resolve_backend
+
+    backend4 = resolve_backend(sps4[0], "auto")
+    print(f"[shard]      2x2 mesh auto backend on {len(jax.devices())} "
+          f"device(s): {backend4}")
+    rep4 = sharded_fabric_report(sps4, cm4)
     print()
     print(render_markdown(rep4))
     t = rep4["totals"]

@@ -28,8 +28,12 @@ accesses because more weights stay resident. This package models that chip:
     chips (``ChipMeshConfig``): K-parallel tiles over the ``model`` axis
     (digital partial sums combined with a reduce-scatter over inter-chip
     links), batch over ``data``; divisibility fallbacks follow
-    ``launch.shardings``. ``sharded_fabric_report`` separates on-chip EMA
-    from cross-chip link traffic.
+    ``launch.shardings``. Execution backends: a host-sequential chip loop
+    or a real multi-device ``jax.experimental.shard_map`` SPMD program
+    (``backend="auto"|"sequential"|"shard_map"``, ``resolve_backend``).
+    ``sharded_fabric_report`` separates on-chip EMA from cross-chip link
+    traffic and reports double-buffered round-overlap latency
+    (``overlapped_mesh_latency``).
 
 Paper-figure correspondence: Fig. 1 (networking configurations) ->
 ``FabricConfig.mode``; Fig. 2 (pair SAR role swap) -> ``pair_sar`` groups;
@@ -41,11 +45,18 @@ See ``docs/fabric.md`` for the full architecture guide.
 
 from repro.fabric.execute import execute_linear, execute_matmul
 from repro.fabric.mapper import LayerPlacement, map_matmul, map_model, model_matmuls
-from repro.fabric.pipeline import fabric_throughput, iso_area_comparison, pipelined_schedule
+from repro.fabric.pipeline import (
+    fabric_throughput,
+    iso_area_comparison,
+    overlap_rounds,
+    overlapped_mesh_latency,
+    pipelined_schedule,
+)
 from repro.fabric.report import fabric_report, render_markdown, sharded_fabric_report
 from repro.fabric.shard import (
     ShardedPlacement,
     execute_sharded_matmul,
+    resolve_backend,
     shard_model,
     shard_placement,
 )
@@ -61,12 +72,15 @@ __all__ = [
     "model_matmuls",
     "fabric_throughput",
     "iso_area_comparison",
+    "overlap_rounds",
+    "overlapped_mesh_latency",
     "pipelined_schedule",
     "execute_matmul",
     "execute_linear",
     "ShardedPlacement",
     "shard_placement",
     "shard_model",
+    "resolve_backend",
     "execute_sharded_matmul",
     "fabric_report",
     "sharded_fabric_report",

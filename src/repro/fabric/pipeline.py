@@ -24,12 +24,27 @@ reproducing the paper's throughput-recovery claim.
 
 from __future__ import annotations
 
-from typing import List
+from typing import List, Sequence
 
 from repro.core.schedule import ScheduleResult, Slot, pair_sar_schedule
 from repro.fabric.topology import FabricConfig
 
-__all__ = ["pipelined_schedule", "fabric_throughput", "iso_area_comparison"]
+__all__ = [
+    "pipelined_schedule",
+    "fabric_throughput",
+    "iso_area_comparison",
+    "conversion_cycles",
+    "overlap_rounds",
+    "overlapped_mesh_latency",
+]
+
+
+def conversion_cycles(placement, rate_per_compute: float) -> float:
+    """Cycles to drain one layer's conversions on its busiest compute array —
+    the per-layer latency formula shared by ``fabric.report``'s rows and
+    :func:`overlapped_mesh_latency` (one definition, so the overlap's serial
+    baseline can never drift from the report's ``latency_s``)."""
+    return placement.conversions_per_array_max / rate_per_compute
 
 
 def _pair_sar(fabric: FabricConfig, n_conversions: int) -> ScheduleResult:
@@ -158,6 +173,79 @@ def fabric_throughput(fabric: FabricConfig, n_conversions: int = 96) -> dict:
         "compute_utilization": sched.utilization("compute"),
         "chip_area_um2": fabric.chip_area_um2(),
         "throughput_per_mm2": chip_rate / (fabric.chip_area_um2() / 1e6),
+    }
+
+
+def overlap_rounds(compute_s: Sequence[float], link_s: Sequence[float]) -> float:
+    """Total latency of double-buffered mesh rounds: the cross-chip
+    reduce-scatter of layer ``i`` runs on the links while layer ``i+1``'s
+    conversions are already in flight on the arrays (the partial-sum buffer
+    is double-buffered, so the arrays never wait for the links unless a
+    reduce-scatter outlasts the next layer's conversion schedule).
+
+    ``compute_s[i]`` is layer i's conversion time, ``link_s[i]`` its
+    reduce-scatter link time; returns the pipelined end-to-end seconds:
+    ``compute_0 + sum(max(compute_i, link_{i-1})) + link_last``.
+
+    Example::
+
+        >>> overlap_rounds([1.0, 1.0, 1.0], [0.5, 0.5, 0.5])  # links fully hidden
+        3.5
+        >>> overlap_rounds([1.0, 1.0], [2.0, 0.0])  # link outlasts next layer
+        3.0
+    """
+    if len(compute_s) != len(link_s):
+        raise ValueError("compute_s and link_s must align layer-for-layer")
+    if not compute_s:
+        return 0.0
+    t = compute_s[0]
+    for i in range(1, len(compute_s)):
+        t += max(compute_s[i], link_s[i - 1])
+    return t + link_s[-1]
+
+
+def overlapped_mesh_latency(sharded: Sequence, n_conversions: int = 96) -> dict:
+    """Mesh latency with layer ``i``'s reduce-scatter overlapping layer
+    ``i+1``'s conversions (see :func:`overlap_rounds`), for a list of
+    :class:`~repro.fabric.shard.ShardedPlacement` layers.
+
+    Returns serial vs overlapped end-to-end seconds plus how much link time
+    the overlap hides — the number ``sharded_fabric_report`` folds into its
+    totals.
+
+    Example::
+
+        >>> from repro.fabric import ChipMeshConfig, FabricConfig, map_matmul, shard_placement
+        >>> fb = FabricConfig(mode="pair_sar", n_arrays=8)
+        >>> cm = ChipMeshConfig(model=2, fabric=fb)
+        >>> sps = [shard_placement(map_matmul(f"l{i}", 4, 64, 64, fb), cm) for i in range(3)]
+        >>> r = overlapped_mesh_latency(sps)
+        >>> 0 < r["overlapped_latency_s"] <= r["serial_latency_s"]
+        True
+    """
+    if not sharded:
+        return {
+            "serial_latency_s": 0.0,
+            "overlapped_latency_s": 0.0,
+            "hidden_link_s": 0.0,
+            "link_hidden_fraction": 0.0,
+        }
+    fabric = sharded[0].chip_mesh.fabric
+    tp = fabric_throughput(fabric, n_conversions)
+    rate_per_compute = tp["group_conversions_per_cycle"] / fabric.compute_arrays_per_group
+    compute = [
+        conversion_cycles(sp.chip, rate_per_compute) / fabric.freq_hz for sp in sharded
+    ]
+    link = [sp.crosschip_latency_s for sp in sharded]
+    serial = sum(compute) + sum(link)
+    overlapped = overlap_rounds(compute, link)
+    hidden = serial - overlapped
+    total_link = sum(link)
+    return {
+        "serial_latency_s": serial,
+        "overlapped_latency_s": overlapped,
+        "hidden_link_s": hidden,
+        "link_hidden_fraction": hidden / total_link if total_link > 0 else 0.0,
     }
 
 

@@ -24,7 +24,12 @@ from typing import List, Optional
 
 from repro.core.energy_area import area_um2, energy_pj
 from repro.fabric.mapper import LayerPlacement
-from repro.fabric.pipeline import fabric_throughput, iso_area_comparison
+from repro.fabric.pipeline import (
+    conversion_cycles,
+    fabric_throughput,
+    iso_area_comparison,
+    overlapped_mesh_latency,
+)
 from repro.fabric.topology import EMA_PJ_PER_BIT, ChipMeshConfig, FabricConfig
 
 __all__ = ["fabric_report", "sharded_fabric_report", "render_markdown"]
@@ -36,7 +41,7 @@ def _layer_row(
     rate_per_compute: float,
     model_resident: bool,
 ) -> dict:
-    cycles = p.conversions_per_array_max / rate_per_compute
+    cycles = conversion_cycles(p, rate_per_compute)
     e_conv = energy_pj(
         fabric.adc_style,
         fabric.adc_bits,
@@ -201,6 +206,12 @@ def sharded_fabric_report(
         "crosschip_energy_pj": sum(r["crosschip_energy_pj"] for r in layers),
         "crosschip_latency_s": sum(r["crosschip_latency_s"] for r in layers),
     }
+    # double-buffered rounds: layer i's reduce-scatter overlaps layer i+1's
+    # conversion schedule (fabric.pipeline.overlap_rounds)
+    overlap = overlapped_mesh_latency(sharded, n_conversions)
+    totals["latency_s_overlapped"] = overlap["overlapped_latency_s"]
+    totals["crosschip_latency_hidden_s"] = overlap["hidden_link_s"]
+    totals["link_hidden_fraction"] = overlap["link_hidden_fraction"]
     report = {
         "mesh": {
             "shape": {"data": chip_mesh.data, "model": chip_mesh.model},
@@ -291,6 +302,13 @@ def render_markdown(report: dict, max_layers: Optional[int] = 24) -> str:
         + (
             f", {t['crosschip_bits_per_pass']:.3g} bits / "
             f"{t['crosschip_energy_pj']/1e6:.3g} uJ cross-chip reduce-scatter"
+            + (
+                f", {t['latency_s_overlapped']*1e3:.3g} ms with double-buffered "
+                f"round overlap ({t.get('link_hidden_fraction', 0.0)*100:.0f}% of "
+                f"link time hidden)"
+                if "latency_s_overlapped" in t
+                else ""
+            )
             if mesh
             else ""
         ),

@@ -27,6 +27,16 @@ fabric-level quantization once, then per (data-shard, column-tile, K-shard)
 tile execution through ``core.cim_linear``'s per-plane machinery. On a 1x1
 mesh it performs the identical operation sequence, so it is bit-for-bit equal
 to the unsharded ``execute_matmul`` (asserted in ``tests/test_fabric_shard``).
+
+Execution backends: ``backend="sequential"`` simulates every chip in a host
+Python loop (runs anywhere); ``backend="shard_map"`` places the chips on a
+real ``(data, model)`` jax device mesh (``launch.mesh.make_chip_mesh``) and
+runs them as one SPMD program — each model-axis device computes its K-slice
+partial sums locally and the digital combine is a ``jax.lax.psum_scatter``
+reduce-scatter (+ gather) over the ``model`` axis, the collective whose link
+traffic ``ShardedPlacement.crosschip_bits_per_pass`` prices. ``"auto"``
+(default) picks ``shard_map`` whenever the host has enough devices and the
+plan has no replication fallbacks, else falls back to the sequential loop.
 """
 
 from __future__ import annotations
@@ -37,6 +47,8 @@ from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.cim_linear import (
@@ -49,13 +61,17 @@ from repro.core.cim_linear import (
 from repro.fabric.mapper import LayerPlacement, map_matmul, model_matmuls
 from repro.fabric.topology import ChipMeshConfig
 from repro.launch import shardings as sh
+from repro.launch.mesh import make_chip_mesh
 
 __all__ = [
     "ShardedPlacement",
     "shard_placement",
     "shard_model",
+    "resolve_backend",
     "execute_sharded_matmul",
 ]
+
+BACKENDS = ("auto", "sequential", "shard_map")
 
 
 @dataclasses.dataclass
@@ -137,10 +153,10 @@ def shard_placement(
     """Partition one mapped layer across the chip mesh.
 
     K-parallel tiles go over the ``model`` axis, batch rows over ``data``,
-    using the same ``spec_for`` divisibility rules (and ``FALLBACKS``
-    recording) as the production param shardings: a K-tile count that does
-    not divide the model axis — or a batch that does not divide the data
-    axis — falls back to replication for that dimension.
+    using the same ``spec_for`` divisibility rules (and scoped
+    ``record_fallbacks`` bookkeeping) as the production param shardings: a
+    K-tile count that does not divide the model axis — or a batch that does
+    not divide the data axis — falls back to replication for that dimension.
 
     Example::
 
@@ -153,14 +169,13 @@ def shard_placement(
     if placement.fabric != chip_mesh.fabric:
         raise ValueError("placement was mapped on a different FabricConfig than chip_mesh.fabric")
     mesh = chip_mesh.mesh()
-    before = len(sh.FALLBACKS)
-    spec = sh.spec_for(
-        mesh,
-        (placement.k_tiles, placement.m),
-        ("tp", "dp"),
-        label=f"fabric.shard/{placement.name}",
-    )
-    fallbacks = list(sh.FALLBACKS[before:])
+    with sh.record_fallbacks() as fallbacks:
+        spec = sh.spec_for(
+            mesh,
+            (placement.k_tiles, placement.m),
+            ("tp", "dp"),
+            label=f"fabric.shard/{placement.name}",
+        )
     k_splits = sh.axes_size(mesh, ("model",)) if spec[0] is not None else 1
     d_splits = sh.axes_size(mesh, ("data",)) if spec[1] is not None else 1
 
@@ -219,6 +234,154 @@ def shard_model(
     return out
 
 
+def _chip_noise_key(key: Optional[jax.Array], chip_index):
+    """Per-chip ADC noise key: ``fold_in(key, chip_index)`` for every chip
+    except chip 0, which keeps the caller's key unchanged — so a 1x1 mesh
+    reproduces the unsharded path's per-tile ``fold_in(key, nt)`` draws
+    bit-for-bit while every other chip gets an independent stream.
+
+    Accepts a Python int (sequential backend) or a traced ``axis_index``
+    scalar (shard_map backend); both derivations are identical, which is what
+    keeps the two backends' noise draws equal.
+    """
+    if key is None:
+        return None
+    if isinstance(chip_index, int):
+        return key if chip_index == 0 else jax.random.fold_in(key, chip_index)
+    return jax.lax.cond(
+        chip_index == 0,
+        lambda: key,
+        lambda: jax.random.fold_in(key, chip_index),
+    )
+
+
+def resolve_backend(sharded: ShardedPlacement, backend: str = "auto") -> str:
+    """Resolve the execution backend for a sharded plan.
+
+    ``shard_map`` needs (a) a concrete device mesh — ``data * model`` jax
+    devices on the host — and (b) a plan with no replication fallbacks (the
+    realized ``d_splits x k_splits`` must equal the mesh shape, or devices
+    along a replicated axis would double-count partial sums). ``"auto"``
+    falls back to ``"sequential"`` when either is missing — and also on a
+    1x1 mesh, where there is nothing to parallelize and the SPMD dispatch
+    is pure overhead; an explicit ``backend="shard_map"`` runs it anyway
+    (the 1x1 bit-exactness tests do exactly that) or raises with the
+    reasons when ineligible.
+
+    Example::
+
+        >>> from repro.fabric import ChipMeshConfig, FabricConfig, map_matmul, shard_placement
+        >>> fb = FabricConfig(mode="pair_sar", n_arrays=8)
+        >>> sp = shard_placement(map_matmul("l", 4, 64, 64, fb), ChipMeshConfig(fabric=fb))
+        >>> resolve_backend(sp, "auto") in ("sequential", "shard_map")
+        True
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
+    if backend == "sequential":
+        return "sequential"
+    cm = sharded.chip_mesh
+    problems = []
+    n_dev = len(jax.devices())
+    if n_dev < cm.n_chips:
+        problems.append(
+            f"host has {n_dev} jax device(s) < {cm.n_chips} chips (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={cm.n_chips})"
+        )
+    if (sharded.d_splits, sharded.k_splits) != (cm.data, cm.model):
+        problems.append(
+            f"replication fallbacks leave realized splits "
+            f"{sharded.d_splits}x{sharded.k_splits} != mesh {cm.data}x{cm.model}"
+        )
+    if problems:
+        if backend == "shard_map":
+            raise ValueError("shard_map backend unavailable: " + "; ".join(problems))
+        return "sequential"
+    if backend == "auto" and cm.n_chips == 1:
+        return "sequential"  # single chip: SPMD dispatch is pure overhead
+    return "shard_map"
+
+
+def _shard_map_matmul(x_int, w_int, sx, sw, sharded: ShardedPlacement, cim: CiMConfig, key):
+    """One SPMD program over the concrete ``(data, model)`` device mesh.
+
+    Each device holds its chip's batch rows and K-slice, runs the same
+    per-column-tile ``core.cim_linear`` machinery as the sequential loop, and
+    the digital combine over the ``model`` axis is the physical collective:
+    a ``psum_scatter`` reduce-scatter (the ``(C-1) * M * N * psum_bits`` link
+    traffic of ``crosschip_bits_per_pass``) followed by the gather that
+    redistributes the combined rows. Scales are applied after the combine —
+    the partial sums are integer-valued, so the sum is exact and the 1x1 mesh
+    stays bit-for-bit equal to the unsharded path.
+    """
+    fabric = sharded.chip_mesh.fabric
+    k_splits, d_splits = sharded.k_splits, sharded.d_splits
+    n = w_int.shape[1]
+    cols = fabric.cols
+    n_tiles = math.ceil(n / cols)
+    k_tiles = math.ceil(sharded.k / fabric.rows)
+    mesh = make_chip_mesh(d_splits, k_splits, require_concrete=True)
+
+    # pad K to whole tiles so every model-axis device gets an equal block;
+    # _bitplane_matmul pads the ragged tail identically in the sequential path
+    k_pad = k_tiles * fabric.rows - x_int.shape[1]
+    if k_pad:
+        x_int = jnp.pad(x_int, ((0, 0), (0, k_pad)))
+        w_int = jnp.pad(w_int, ((0, k_pad), (0, 0)))
+
+    has_key = key is not None
+
+    def chip_fn(x_blk, w_blk, sx_, sw_, *maybe_key):
+        di = jax.lax.axis_index("data")
+        ci = jax.lax.axis_index("model")
+        chip_key = (
+            _chip_noise_key(maybe_key[0], di * k_splits + ci) if has_key else None
+        )
+        parts = []
+        conversions = jnp.zeros((), jnp.int32)
+        comparisons = jnp.zeros((), jnp.int32)
+        for nt in range(n_tiles):
+            n0, n1 = nt * cols, min((nt + 1) * cols, n)
+            if cim.mode == "bitplane":
+                tkey = jax.random.fold_in(chip_key, nt) if has_key else None
+                y_t, st = _bitplane_matmul(x_blk, w_blk[:, n0:n1], cim, tkey)
+                conversions = conversions + st.conversions
+                comparisons = comparisons + st.comparisons
+            else:
+                y_t, _ = _fake_quant_matmul(x_blk, w_blk[:, n0:n1], cim)
+            parts.append(y_t)
+        y_local = jnp.concatenate(parts, axis=1)  # this chip's K-partial, (m_shard, N)
+        if k_splits > 1:
+            if n % k_splits == 0:
+                # the modeled ring reduce-scatter, then the gather that hands
+                # every chip the combined rows back
+                y_sc = jax.lax.psum_scatter(
+                    y_local, "model", scatter_dimension=1, tiled=True
+                )
+                y_sum = jax.lax.all_gather(y_sc, "model", axis=1, tiled=True)
+            else:
+                y_sum = jax.lax.psum(y_local, "model")
+        else:
+            y_sum = y_local
+        conversions = jax.lax.psum(conversions, ("data", "model"))
+        comparisons = jax.lax.psum(comparisons, ("data", "model"))
+        return y_sum * sx_ * sw_, conversions, comparisons
+
+    in_specs = [P("data", "model"), P("model", None), P(), P(None, None)]
+    args = [x_int, w_int, sx, sw]
+    if has_key:
+        in_specs.append(P())
+        args.append(key)
+    fn = shard_map(
+        chip_fn,
+        mesh,
+        in_specs=tuple(in_specs),
+        out_specs=(P("data", None), P(), P()),
+        check_rep=False,
+    )
+    return fn(*args)
+
+
 def execute_sharded_matmul(
     x: jnp.ndarray,
     w: jnp.ndarray,
@@ -227,6 +390,7 @@ def execute_sharded_matmul(
     sharded: Optional[ShardedPlacement] = None,
     key: Optional[jax.Array] = None,
     return_stats: bool = False,
+    backend: str = "auto",
 ):
     """``y = x @ w`` executed shard-wise over the chip mesh.
 
@@ -235,6 +399,15 @@ def execute_sharded_matmul(
     reduce-scatter combine is a plain digital sum — on a 1x1 mesh the
     operation sequence is identical to ``fabric.execute.execute_matmul`` and
     the result is bit-for-bit equal (bitplane and fake_quant, noiseless ADC).
+
+    ``backend`` selects how the chips run (see :func:`resolve_backend`):
+    ``"sequential"`` simulates them in a host loop, ``"shard_map"`` places
+    them on a real jax device mesh and combines partials with the
+    ``psum_scatter`` reduce-scatter the traffic model prices, ``"auto"``
+    (default) uses shard_map when the host has the devices and the plan has
+    no fallbacks. The two backends draw identical per-chip ADC noise keys
+    (:func:`_chip_noise_key`), so they agree to float tolerance on any mesh
+    and bit-for-bit on 1x1.
 
     ``x``: (..., K); ``w``: (K, N). Per-chip shards run through the same
     ``core.cim_linear`` per-plane machinery as the single-chip path; the
@@ -269,6 +442,17 @@ def execute_sharded_matmul(
         raise ValueError(
             f"sharded placement is for K={sharded.k},N={sharded.n}; got K={k},N={n}"
         )
+    requested = backend
+    backend = resolve_backend(sharded, backend)
+    if backend == "shard_map" and xm.shape[0] % sharded.d_splits:
+        # the plan was made for a divisible batch; a ragged runtime batch can
+        # only run on the sequential loop (last shard takes the remainder)
+        if requested == "shard_map":
+            raise ValueError(
+                f"shard_map backend unavailable: batch rows {xm.shape[0]} are "
+                f"not divisible by the data axis ({sharded.d_splits})"
+            )
+        backend = "sequential"
     k_splits, d_splits = sharded.k_splits, sharded.d_splits
     k_tiles = math.ceil(k / fabric.rows)
     n_tiles = math.ceil(n / fabric.cols)
@@ -278,40 +462,44 @@ def execute_sharded_matmul(
     x_int, sx = quantize_symmetric(xm, cim.a_bits, cim.a_signed)
     w_int, sw = quantize_symmetric(w, cim.w_bits, cim.w_signed, per_axis=-1)
 
-    m_total = xm.shape[0]
-    m_shard = m_total // d_splits if d_splits > 1 else m_total
-    conversions = jnp.zeros((), jnp.int32)
-    comparisons = jnp.zeros((), jnp.int32)
-    data_parts = []
-    for d in range(d_splits):
-        m0 = d * m_shard
-        m1 = (d + 1) * m_shard if d < d_splits - 1 else m_total
-        x_d = x_int[m0:m1]
-        parts = []
-        for nt in range(n_tiles):
-            n0, n1 = nt * cols, min((nt + 1) * cols, n)
-            w_tile = w_int[:, n0:n1]
-            total = None
-            for c in range(k_splits):
-                k0, k1 = _k_slice(k, fabric.rows, k_tiles, k_splits, c)
-                if cim.mode == "bitplane":
-                    # chip 0's tile keys coincide with the unsharded path's,
-                    # so a 1x1 mesh reproduces its noise draws exactly
-                    tkey = (
-                        jax.random.fold_in(key, (d * k_splits + c) * n_tiles + nt)
-                        if key is not None
-                        else None
-                    )
-                    y_c, st = _bitplane_matmul(x_d[:, k0:k1], w_tile[k0:k1], cim, tkey)
-                    conversions = conversions + st.conversions
-                    comparisons = comparisons + st.comparisons
-                else:
-                    y_c, _ = _fake_quant_matmul(x_d[:, k0:k1], w_tile[k0:k1], cim)
-                # digital partial-sum combine == the reduce-scatter's sum
-                total = y_c if total is None else total + y_c
-            parts.append(total * sx * sw[:, n0:n1])
-        data_parts.append(jnp.concatenate(parts, axis=1))
-    y_q = jnp.concatenate(data_parts, axis=0)
+    if backend == "shard_map":
+        y_q, conversions, comparisons = _shard_map_matmul(
+            x_int, w_int, sx, sw, sharded, cim, key
+        )
+    else:
+        m_total = xm.shape[0]
+        m_shard = m_total // d_splits if d_splits > 1 else m_total
+        conversions = jnp.zeros((), jnp.int32)
+        comparisons = jnp.zeros((), jnp.int32)
+        data_parts = []
+        for d in range(d_splits):
+            m0 = d * m_shard
+            m1 = (d + 1) * m_shard if d < d_splits - 1 else m_total
+            x_d = x_int[m0:m1]
+            parts = []
+            for nt in range(n_tiles):
+                n0, n1 = nt * cols, min((nt + 1) * cols, n)
+                w_tile = w_int[:, n0:n1]
+                total = None
+                for c in range(k_splits):
+                    k0, k1 = _k_slice(k, fabric.rows, k_tiles, k_splits, c)
+                    if cim.mode == "bitplane":
+                        chip_key = _chip_noise_key(key, d * k_splits + c)
+                        tkey = (
+                            jax.random.fold_in(chip_key, nt)
+                            if chip_key is not None
+                            else None
+                        )
+                        y_c, st = _bitplane_matmul(x_d[:, k0:k1], w_tile[k0:k1], cim, tkey)
+                        conversions = conversions + st.conversions
+                        comparisons = comparisons + st.comparisons
+                    else:
+                        y_c, _ = _fake_quant_matmul(x_d[:, k0:k1], w_tile[k0:k1], cim)
+                    # digital partial-sum combine == the reduce-scatter's sum
+                    total = y_c if total is None else total + y_c
+                parts.append(total * sx * sw[:, n0:n1])
+            data_parts.append(jnp.concatenate(parts, axis=1))
+        y_q = jnp.concatenate(data_parts, axis=0)
 
     if cim.ste:
         y_lin = xm @ w

@@ -46,19 +46,22 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path, force=F
     t0 = time.time()
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag}
     try:
-        mesh = make_production_mesh(multi_pod=multi_pod)
-        n_dev = mesh.devices.size
-        cell = build_cell(arch, shape_name, mesh)
-        with mesh:
-            jitted = jax.jit(
-                cell.fn,
-                in_shardings=cell.in_shardings,
-                donate_argnums=cell.donate,
-            )
-            lowered = jitted.lower(*cell.args)
-            t_lower = time.time() - t0
-            compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+        # scope fallback recording to THIS cell: concurrent/repeated cells no
+        # longer leak replication records into each other's reports
+        with shmod.record_fallbacks() as cell_fallbacks:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+            n_dev = mesh.devices.size
+            cell = build_cell(arch, shape_name, mesh)
+            with mesh:
+                jitted = jax.jit(
+                    cell.fn,
+                    in_shardings=cell.in_shardings,
+                    donate_argnums=cell.donate,
+                )
+                lowered = jitted.lower(*cell.args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
         mem_stats = {}
@@ -93,7 +96,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path, force=F
             lower_s=round(t_lower, 1),
             compile_s=round(t_compile, 1),
             memory=mem_stats,
-            fallbacks=list(shmod.FALLBACKS),
+            fallbacks=list(cell_fallbacks),
             roofline=rep.to_dict(),
             roofline_fraction=rep.roofline_fraction,
             hlo_bytes=len(hlo),

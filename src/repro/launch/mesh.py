@@ -21,7 +21,7 @@ def make_local_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def make_chip_mesh(data: int = 1, model: int = 1):
+def make_chip_mesh(data: int = 1, model: int = 1, *, require_concrete: bool = False):
     """``(data, model)`` mesh for the multi-chip CiM fabric (``fabric.shard``).
 
     Returns a concrete device mesh when the host has ``data * model`` jax
@@ -29,6 +29,12 @@ def make_chip_mesh(data: int = 1, model: int = 1):
     — the planning paths (``shardings.spec_for`` divisibility checks, traffic
     models) only read ``shape`` / ``axis_names``, so a 16-chip fabric can be
     sized and swept on a single-device host.
+
+    The device-count check happens HERE, deterministically, before any jax
+    mesh is built: execution paths that need real devices (the ``shard_map``
+    backend of ``fabric.shard.execute_sharded_matmul``) pass
+    ``require_concrete=True`` and get an immediate, actionable error instead
+    of an opaque failure deep inside ``shard_map``.
 
     Example::
 
@@ -38,8 +44,16 @@ def make_chip_mesh(data: int = 1, model: int = 1):
     """
     if data < 1 or model < 1:
         raise ValueError(f"mesh axes must be >= 1, got data={data}, model={model}")
-    if len(jax.devices()) >= data * model:
+    n_needed = data * model
+    n_have = len(jax.devices())
+    if n_have >= n_needed:
         return jax.make_mesh((data, model), ("data", "model"))
+    if require_concrete:
+        raise RuntimeError(
+            f"make_chip_mesh({data}, {model}) needs {n_needed} jax devices but the "
+            f"host has {n_have}; run on more devices or force host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_needed}"
+        )
     from jax.sharding import AbstractMesh
 
     return AbstractMesh((("data", data), ("model", model)))

@@ -93,8 +93,11 @@ def serve_batch(
         # (s + gen_len - 1) passes shared across the b requests of the batch
         passes = (s + st.gen_len - 1) / b
         xchip_bits = t.get("crosschip_bits_per_pass", 0)
+        # mesh rollups carry the double-buffered round-overlap latency
+        # (reduce-scatter of layer i hidden under layer i+1's conversions)
+        latency_s = t.get("latency_s_overlapped", t["latency_s"])
         fab = {
-            "latency_s_per_request": t["latency_s"] * passes,
+            "latency_s_per_request": latency_s * passes,
             "energy_uj_per_request": (
                 t["digitization_energy_pj"]
                 + t["ema_energy_pj"]
@@ -106,10 +109,12 @@ def serve_batch(
             "crosschip_bits_per_request": xchip_bits * passes,
             "model_resident": t["model_resident"],
             "n_chips": fabric_rollup.get("mesh", {}).get("n_chips", 1),
+            "exec_backend": fabric_rollup.get("exec_backend", "n/a"),
         }
         out["fabric"] = fab
         print(
-            f"[serve] batch {b}x{total} tok on {fab['n_chips']} chip(s): est. "
+            f"[serve] batch {b}x{total} tok on {fab['n_chips']} chip(s) "
+            f"[{fab['exec_backend']}]: est. "
             f"{fab['latency_s_per_request']*1e3:.3g} ms, "
             f"{fab['energy_uj_per_request']:.3g} uJ per request "
             f"(on-chip EMA {fab['onchip_ema_bits_per_request']:.3g} bits, "
@@ -143,6 +148,14 @@ def main():
         help="shard the mapped fabric across a (data x model) chip mesh "
         "(1 -> 1x1, 4 -> 2x2, 16 -> 4x4; repro.fabric.shard)",
     )
+    ap.add_argument(
+        "--fabric-backend",
+        default="auto",
+        choices=["auto", "sequential", "shard_map"],
+        help="chip execution backend for the fabric validation pass: "
+        "sequential host loop, real multi-device shard_map, or auto "
+        "(shard_map when the host has the devices; repro.fabric.resolve_backend)",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -162,12 +175,18 @@ def main():
         # carries the per-request fabric cost, not just a post-hoc printout;
         # one mapped pass covers the whole lock-step batch (tokens = batch),
         # which is what lets the mesh's data axis actually split work
+        import jax as _jax
+
         from repro.fabric import (
             ChipMeshConfig,
             FabricConfig,
+            execute_sharded_matmul,
             fabric_report,
+            map_matmul,
             map_model,
+            resolve_backend,
             shard_model,
+            shard_placement,
             sharded_fabric_report,
         )
 
@@ -175,9 +194,38 @@ def main():
         if args.fabric_chips > 1:
             side = {4: 2, 16: 4}[args.fabric_chips]
             cm = ChipMeshConfig(data=side, model=side, fabric=fb)
-            rollup = sharded_fabric_report(shard_model(cfg, cm, tokens=st.batch), cm)
+            sps = shard_model(cfg, cm, tokens=st.batch)
+            rollup = sharded_fabric_report(sps, cm)
         else:
+            cm = ChipMeshConfig(fabric=fb)
+            sps = []
             rollup = fabric_report(map_model(cfg, fb, tokens=st.batch), fb)
+
+        # resolve the backend against the REAL model placements: one layer
+        # with a replication fallback is enough to keep the whole pass
+        # sequential (and an explicit shard_map request fails loudly on it)
+        smoke_m, smoke_k, smoke_n = 2 * cm.data, cm.model * fb.rows, fb.cols
+        sp = shard_placement(map_matmul("smoke", smoke_m, smoke_k, smoke_n, fb), cm)
+        resolved = {resolve_backend(p, args.fabric_backend) for p in sps or [sp]}
+        backend = "sequential" if "sequential" in resolved else "shard_map"
+        # numeric backend validation: run one mesh-divisible matmul through
+        # the resolved backend so the log line reports a path that executed
+        skey = _jax.random.PRNGKey(0)
+        x_s = _jax.random.normal(skey, (smoke_m, smoke_k))
+        w_s = _jax.random.normal(_jax.random.fold_in(skey, 1), (smoke_k, smoke_n))
+        from repro.core.cim_linear import CiMConfig as _CiM
+
+        execute_sharded_matmul(
+            x_s, w_s, cm,
+            _CiM(mode="bitplane", a_bits=4, w_bits=4, adc_bits=fb.adc_bits,
+                 rows=fb.rows, ste=False),
+            sharded=sp, backend=backend,
+        )
+        rollup["exec_backend"] = backend
+        print(
+            f"[serve] fabric exec backend: {backend} "
+            f"({len(_jax.devices())} jax device(s) for {cm.n_chips} chip(s))"
+        )
 
     out = serve_batch(cfg, st, fabric_rollup=rollup)
     print(

@@ -8,11 +8,18 @@ Logical axes:
 A dim that does not divide its assigned mesh axes falls back to replication
 for that dim (e.g. kv_heads=8 on a 16-way model axis) — every fallback is
 recorded so the dry-run report shows exactly what got replicated.
+
+Fallback records are *scoped*, not global: wrap the spec-building calls in
+``with record_fallbacks() as fb:`` and read ``fb`` afterwards. Callers that
+don't open a recorder get no bookkeeping and leak nothing — concurrent
+serving / planning calls each see only their own records.
 """
 
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence
+import contextlib
+import contextvars
+from typing import Any, Iterator, Optional, Sequence
 
 import jax
 import numpy as np
@@ -26,10 +33,45 @@ __all__ = [
     "param_shardings",
     "batch_shardings",
     "cache_shardings",
-    "FALLBACKS",
+    "record_fallbacks",
 ]
 
-FALLBACKS: list[str] = []  # (cleared per dry-run cell) replication fallbacks
+# Stack of active fallback recorders (innermost last). A ContextVar keeps
+# concurrent threads / async tasks from seeing each other's records — the
+# leak the old module-global FALLBACKS list had.
+_RECORDERS: contextvars.ContextVar[tuple] = contextvars.ContextVar(
+    "sharding_fallback_recorders", default=()
+)
+
+
+@contextlib.contextmanager
+def record_fallbacks() -> Iterator[list[str]]:
+    """Scope replication-fallback recording to a block.
+
+    Every ``spec_for`` call inside the block appends its fallback messages to
+    the yielded list (and to any enclosing recorder — nesting composes).
+    Outside any recorder, fallbacks are simply not recorded.
+
+    Example::
+
+        >>> import numpy as np
+        >>> mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        >>> with record_fallbacks() as fb:
+        ...     _ = spec_for(mesh, (16, 32), ("tp", "dp"), "t")
+        >>> fb
+        []
+    """
+    rec: list[str] = []
+    token = _RECORDERS.set(_RECORDERS.get() + (rec,))
+    try:
+        yield rec
+    finally:
+        _RECORDERS.reset(token)
+
+
+def _record_fallback(msg: str) -> None:
+    for rec in _RECORDERS.get():
+        rec.append(msg)
 
 
 def logical_to_mesh(mesh: Mesh) -> dict[str, tuple[str, ...]]:
@@ -64,7 +106,7 @@ def spec_for(
             entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
         else:
             entries.append(None)
-            FALLBACKS.append(
+            _record_fallback(
                 f"{label}: dim {i} ({dim}) not divisible by {ax}{mesh_axes} -> replicated"
             )
     return P(*entries)

@@ -74,7 +74,6 @@ def build_cell(
     shape = SHAPES[shape_name]
     cfg = cfg_override or for_shape(get_config(arch), shape)
     model = build_model(cfg)
-    sh.FALLBACKS.clear()
 
     # activation sharding constraints, read by the model code at trace time
     from repro.models import layers as Lmod

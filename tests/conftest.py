@@ -1,6 +1,16 @@
 import os
 
-# Keep smoke tests on the single real CPU device (the dry-run sets its own
-# 512-device flag in repro.launch.dryrun, which must be the FIRST import
-# there — never set globally here).
+# Keep smoke tests on the CPU platform (the dry-run sets its own 512-device
+# flag in repro.launch.dryrun, which must be the FIRST import there — never
+# set globally here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Force 8 host devices so the shard_map execution backend of
+# repro.fabric.shard runs on a REAL multi-device mesh in the tier-1 suite
+# (tests/test_fabric_shard.py). Must land before the first jax import; an
+# explicit caller-provided flag wins.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8"
+    ).strip()

@@ -1,22 +1,28 @@
 """Multi-chip fabric sharding: mesh planning, divisibility fallbacks,
-sharded execution numerics, and the cross-chip traffic rollup."""
+sharded execution numerics (sequential and shard_map backends), and the
+cross-chip traffic rollup. ``tests/conftest.py`` forces 8 host devices so
+the shard_map backend runs on a REAL multi-device mesh here."""
 
 import jax
 import numpy as np
 import pytest
 
-from repro.core.cim_linear import CiMConfig
+from repro.core.cim_linear import CiMConfig, quantize_symmetric, _bitplane_matmul
 from repro.fabric import (
     ChipMeshConfig,
     FabricConfig,
     execute_matmul,
     execute_sharded_matmul,
     map_matmul,
+    overlap_rounds,
+    overlapped_mesh_latency,
     render_markdown,
+    resolve_backend,
     shard_model,
     shard_placement,
     sharded_fabric_report,
 )
+from repro.fabric.shard import _chip_noise_key
 from repro.configs.registry import get_config
 from repro.launch import shardings as sh
 from repro.launch.mesh import make_chip_mesh
@@ -50,6 +56,17 @@ def test_make_chip_mesh_abstract_fallback():
     assert mesh.shape["data"] == 4 and mesh.shape["model"] == 4
     # spec_for works against it — the planning contract fabric.shard relies on
     assert sh.spec_for(mesh, (16, 8), ("tp", "dp"), "t") is not None
+
+
+def test_make_chip_mesh_require_concrete():
+    """Device validation happens up front, with an actionable message —
+    not deep inside shard_map."""
+    with pytest.raises(RuntimeError, match=r"needs 16 jax devices.*host has 8"):
+        make_chip_mesh(data=4, model=4, require_concrete=True)
+    mesh = make_chip_mesh(data=2, model=2, require_concrete=True)
+    assert hasattr(mesh, "devices")  # concrete Mesh, not AbstractMesh
+    with pytest.raises(ValueError):
+        make_chip_mesh(data=0, model=2, require_concrete=True)
 
 
 # ---------------------------------------------------------------------------
@@ -219,3 +236,201 @@ def test_sharded_report_totals_consistency():
         sp.crosschip_bits_per_pass for sp in sps
     )
     assert rep["totals"]["conversions"] == sum(r["conversions"] for r in rep["layers"])
+
+
+# ---------------------------------------------------------------------------
+# execution backends: shard_map on a real device mesh vs the sequential loop
+# ---------------------------------------------------------------------------
+
+
+def test_backend_resolution_and_errors():
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    sp = shard_placement(map_matmul("l", 4, 64, 64, FB), cm)
+    assert resolve_backend(sp, "auto") == "shard_map"  # conftest forces 8 devices
+    assert resolve_backend(sp, "sequential") == "sequential"
+    # 1x1: nothing to parallelize — auto stays sequential, explicit runs SPMD
+    sp1 = shard_placement(map_matmul("l", 4, 64, 64, FB), ChipMeshConfig(fabric=FB))
+    assert resolve_backend(sp1, "auto") == "sequential"
+    assert resolve_backend(sp1, "shard_map") == "shard_map"
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve_backend(sp, "bogus")
+    # 16 chips > 8 devices: auto falls back, explicit shard_map explains why
+    big = ChipMeshConfig(data=4, model=4, fabric=FB)
+    sp_big = shard_placement(map_matmul("l", 16, 256, 64, FB), big)
+    assert resolve_backend(sp_big, "auto") == "sequential"
+    with pytest.raises(ValueError, match="shard_map backend unavailable"):
+        resolve_backend(sp_big, "shard_map")
+    # replication fallback (3 K-tiles on model=2): realized splits != mesh
+    cmf = ChipMeshConfig(model=2, fabric=FB)
+    spf = shard_placement(map_matmul("odd", 4, 40, 64, FB), cmf)
+    assert spf.k_splits == 1
+    assert resolve_backend(spf, "auto") == "sequential"
+    with pytest.raises(ValueError, match="replication fallbacks"):
+        resolve_backend(spf, "shard_map")
+
+
+def test_shard_map_1x1_bit_exact_incl_noise():
+    """The shard_map backend on a 1x1 device mesh is bit-for-bit the
+    unsharded fabric.execute path, noiseless AND noisy ADC."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 48))
+    cm = ChipMeshConfig(fabric=FB)
+    y_sm = execute_sharded_matmul(x, w, cm, CIM_BP, backend="shard_map")
+    y_ref = execute_matmul(x, w, FB, CIM_BP)
+    assert (np.asarray(y_sm) == np.asarray(y_ref)).all()
+    noisy = CiMConfig(
+        mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False,
+        comparator_sigma=0.05,
+    )
+    nk = jax.random.PRNGKey(7)
+    y_sm = execute_sharded_matmul(x, w, cm, noisy, key=nk, backend="shard_map")
+    y_ref = execute_matmul(x, w, FB, noisy, key=nk)
+    assert (np.asarray(y_sm) == np.asarray(y_ref)).all()
+
+
+@pytest.mark.parametrize("data,model", [(1, 2), (2, 1), (2, 2)])
+def test_shard_map_matches_sequential(data, model):
+    """On a forced multi-device host mesh the shard_map backend matches the
+    sequential chip loop to float tolerance (identical per-chip noise keys;
+    only the reduce order of the collective may differ)."""
+    cm = ChipMeshConfig(data=data, model=model, fabric=FB)
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (4, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 48))
+    y_sm, st_sm = execute_sharded_matmul(
+        x, w, cm, CIM_BP, backend="shard_map", return_stats=True
+    )
+    y_seq, st_seq = execute_sharded_matmul(
+        x, w, cm, CIM_BP, backend="sequential", return_stats=True
+    )
+    np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_seq), atol=1e-5, rtol=1e-6)
+    assert int(st_sm.conversions) == int(st_seq.conversions)
+    assert int(st_sm.comparisons) == int(st_seq.comparisons)
+    # noisy ADC: same chip/tile key derivation on both backends
+    noisy = CiMConfig(
+        mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False,
+        comparator_sigma=0.05,
+    )
+    nk = jax.random.PRNGKey(9)
+    y_sm = execute_sharded_matmul(x, w, cm, noisy, key=nk, backend="shard_map")
+    y_seq = execute_sharded_matmul(x, w, cm, noisy, key=nk, backend="sequential")
+    np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_seq), atol=1e-4, rtol=1e-5)
+    # the link-traffic model is planning-side: identical for both backends
+    sp = shard_placement(map_matmul("matmul", 4, 64, 48, FB), cm)
+    rep = sharded_fabric_report([sp], cm)
+    assert rep["totals"]["crosschip_bits_per_pass"] == sp.crosschip_bits_per_pass
+
+
+def test_ragged_runtime_batch_falls_back_to_sequential():
+    """A runtime batch not divisible by the data axis can only run on the
+    sequential loop (last shard takes the remainder): auto must fall back
+    instead of crashing inside shard_map; explicit shard_map must explain."""
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    sp = shard_placement(map_matmul("l", 4, 64, 48, FB), cm)
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (5, 64))  # 5 rows on a 2-way data axis
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 48))
+    y_auto = execute_sharded_matmul(x, w, cm, CIM_BP, sharded=sp, backend="auto")
+    y_seq = execute_sharded_matmul(x, w, cm, CIM_BP, sharded=sp, backend="sequential")
+    assert (np.asarray(y_auto) == np.asarray(y_seq)).all()
+    with pytest.raises(ValueError, match="not divisible by the data axis"):
+        execute_sharded_matmul(x, w, cm, CIM_BP, sharded=sp, backend="shard_map")
+
+
+def test_shard_map_fake_quant_matches_sequential():
+    cim = CiMConfig(mode="fake_quant", a_bits=8, w_bits=8, adc_bits=5, rows=16, ste=False)
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (4, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 48))
+    y_sm = execute_sharded_matmul(x, w, cm, cim, backend="shard_map")
+    y_seq = execute_sharded_matmul(x, w, cm, cim, backend="sequential")
+    np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_seq), atol=1e-5, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# per-chip ADC noise keys (regression: chips must never share draws)
+# ---------------------------------------------------------------------------
+
+
+def test_chip_noise_keys_distinct():
+    key = jax.random.PRNGKey(0)
+
+    def kd(k):  # raw uint32 PRNG keys and new-style typed keys both compare
+        return np.asarray(jax.random.key_data(k) if jax.dtypes.issubdtype(
+            k.dtype, jax.dtypes.prng_key) else k)
+
+    ks = [kd(_chip_noise_key(key, c)) for c in range(4)]
+    # chip 0 keeps the caller's key (1x1 bit-exactness); all chips distinct
+    assert (ks[0] == kd(key)).all()
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not (ks[i] == ks[j]).all(), (i, j)
+
+
+def test_model_axis_chips_draw_independent_noise():
+    """Two model-axis chips given IDENTICAL K-slices must produce different
+    noisy partial sums — a shared/reused key would make the sharded result
+    exactly twice chip 0's partial."""
+    noisy = CiMConfig(
+        mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False,
+        comparator_sigma=0.2,
+    )
+    cm = ChipMeshConfig(model=2, fabric=FB)
+    key = jax.random.PRNGKey(4)
+    nk = jax.random.PRNGKey(11)
+    xa = jax.random.normal(key, (4, 32))
+    wa = jax.random.normal(jax.random.fold_in(key, 1), (32, 32))
+    # duplicated K-halves: chip 0 and chip 1 see the same integer problem
+    x = np.concatenate([np.asarray(xa), np.asarray(xa)], axis=1)
+    w = np.concatenate([np.asarray(wa), np.asarray(wa)], axis=0)
+    y = np.asarray(
+        execute_sharded_matmul(jax.numpy.asarray(x), jax.numpy.asarray(w), cm, noisy, key=nk)
+    )
+    # what a shared/reused key would produce: 2x chip 0's noisy partial
+    x_int, sx = quantize_symmetric(jax.numpy.asarray(x).reshape(-1, 64), 4, True)
+    w_int, sw = quantize_symmetric(jax.numpy.asarray(w), 4, True, per_axis=-1)
+    y0, _ = _bitplane_matmul(x_int[:, :32], w_int[:32], noisy, jax.random.fold_in(nk, 0))
+    y_shared = np.asarray(2.0 * y0 * sx * sw)
+    assert not np.allclose(y, y_shared, atol=1e-6), "chips reused the same noise key"
+    # sanity: with a noiseless ADC the duplicated halves DO sum to 2x chip 0
+    clean = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+    y_clean = np.asarray(
+        execute_sharded_matmul(jax.numpy.asarray(x), jax.numpy.asarray(w), cm, clean)
+    )
+    y0c, _ = _bitplane_matmul(x_int[:, :32], w_int[:32], clean, None)
+    np.testing.assert_allclose(y_clean, np.asarray(2.0 * y0c * sx * sw), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pipeline: double-buffered reduce-scatter / conversion overlap
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_rounds_math():
+    # links fully hidden under the next layer's conversions
+    assert overlap_rounds([1.0, 1.0, 1.0], [0.5, 0.5, 0.5]) == pytest.approx(3.5)
+    # a link that outlasts the next layer's conversions stalls the pipe
+    assert overlap_rounds([1.0, 1.0], [2.0, 0.0]) == pytest.approx(3.0)
+    # degenerate cases
+    assert overlap_rounds([], []) == 0.0
+    assert overlap_rounds([2.0], [0.5]) == pytest.approx(2.5)
+    with pytest.raises(ValueError):
+        overlap_rounds([1.0], [1.0, 2.0])
+
+
+def test_report_overlap_totals():
+    cfg = get_config("smollm-135m")
+    cm = ChipMeshConfig(data=2, model=2, fabric=FabricConfig(mode="hybrid", n_arrays=252))
+    sps = shard_model(cfg, cm, tokens=4, block_only=True)
+    rep = sharded_fabric_report(sps, cm)
+    t = rep["totals"]
+    ov = overlapped_mesh_latency(sps)
+    assert t["latency_s_overlapped"] == pytest.approx(ov["overlapped_latency_s"])
+    assert ov["serial_latency_s"] == pytest.approx(t["latency_s"])
+    assert 0.0 < t["latency_s_overlapped"] <= t["latency_s"]
+    # multi-layer mesh with real link time: some of it must be hidden
+    assert t["crosschip_latency_hidden_s"] > 0
+    assert 0.0 < t["link_hidden_fraction"] <= 1.0
+    assert "double-buffered round overlap" in render_markdown(rep)

@@ -18,20 +18,42 @@ def mesh():
 
 
 def test_spec_divisible(mesh):
-    sh.FALLBACKS.clear()
-    spec = sh.spec_for(mesh, (16, 32), ("dp", "tp"), "t")
+    with sh.record_fallbacks() as fb:
+        spec = sh.spec_for(mesh, (16, 32), ("dp", "tp"), "t")
     assert spec == P("data", "model")
-    assert not sh.FALLBACKS
+    assert not fb
 
 
 def test_spec_fallback_records(mesh):
-    sh.FALLBACKS.clear()
-    spec = sh.spec_for(mesh, (7, 32), ("dp", "tp"), "odd")
-    # 7 divides 1 (single-device mesh) so no fallback here; use fake sizes
-    big = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1), ("pod", "data", "model"))
-    sh.FALLBACKS.clear()
-    # force non-divisible by checking helper directly
-    assert sh.spec_for(mesh, (16,), ("tp",), "x") == P("model")
+    # a 2-way model axis with an odd dim must record the replication fallback
+    dev2 = np.array(jax.devices()[:2]).reshape(1, 2)
+    mesh2 = Mesh(dev2, ("data", "model"))
+    with sh.record_fallbacks() as fb:
+        assert sh.spec_for(mesh2, (7,), ("tp",), "odd") == P(None)
+    assert len(fb) == 1 and "odd" in fb[0]
+    with sh.record_fallbacks() as fb2:
+        assert sh.spec_for(mesh, (16,), ("tp",), "x") == P("model")
+    assert not fb2
+
+
+def test_fallback_recording_is_scoped():
+    """Records don't leak across scopes (the old module-global bug) and
+    nested recorders both observe inner fallbacks."""
+    dev2 = np.array(jax.devices()[:2]).reshape(1, 2)
+    mesh2 = Mesh(dev2, ("data", "model"))
+    # outside any recorder: nothing to leak into, and no error
+    sh.spec_for(mesh2, (7,), ("tp",), "unscoped")
+    with sh.record_fallbacks() as outer:
+        sh.spec_for(mesh2, (5,), ("tp",), "outer-only")
+        with sh.record_fallbacks() as inner:
+            sh.spec_for(mesh2, (3,), ("tp",), "both")
+        sh.spec_for(mesh2, (9,), ("tp",), "outer-again")
+    assert [m.split(":")[0] for m in inner] == ["both"]
+    assert [m.split(":")[0] for m in outer] == ["outer-only", "both", "outer-again"]
+    # a fresh recorder starts empty — nothing leaked from the calls above
+    with sh.record_fallbacks() as fresh:
+        pass
+    assert fresh == []
 
 
 def test_param_rules_cover_all_archs(mesh):

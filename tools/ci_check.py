@@ -2,8 +2,10 @@
 
 Runs the repo's tier-1 suite (ROADMAP.md), the fabric design-space sweep
 (``BENCH_fabric.json``), the multi-chip shard smoke — a local 1x1-mesh
-bit-exactness check plus the 1/4/16-chip mesh sweep, written to
-``BENCH_fabric_shard.json`` — and the docs gate: ``README.md`` and
+bit-exactness check, the 1/4/16-chip mesh sweep, and the shard_map
+execution backend run under forced 8 host devices (subprocess; separate
+``shard_map_smoke`` key), written to ``BENCH_fabric_shard.json`` — and the
+docs gate: ``README.md`` and
 ``docs/fabric.md`` must exist, every dotted ``repro.*`` reference in them
 must import, and every ``repro.fabric`` public symbol must be documented in
 ``docs/fabric.md``. Exits non-zero if any stage fails or a smoke benchmark
@@ -65,8 +67,34 @@ def run_fabric_smoke(out: Path) -> bool:
     return True
 
 
+def run_backend_smoke() -> dict:
+    """Run the shard_map-vs-sequential backend smoke under forced 8 host
+    devices (subprocess: jax pins the device count at first init, so the
+    in-process smoke above cannot change it)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + str(REPO) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (flags + " --xla_force_host_platform_device_count=8").strip()
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fabric_sweep", "--backend-smoke"],
+        cwd=REPO, env=env, capture_output=True, text=True,
+    )
+    if proc.returncode != 0:
+        return {"error": f"rc={proc.returncode}: {proc.stderr[-2000:]}"}
+    try:
+        return json.loads(proc.stdout)
+    except json.JSONDecodeError:
+        return {"error": f"unparseable output: {proc.stdout[-2000:]}"}
+
+
 def run_shard_smoke(out: Path) -> bool:
-    """Multi-chip smoke: 1x1-mesh bit-exactness + the 1/4/16-chip sweep."""
+    """Multi-chip smoke: 1x1-mesh bit-exactness, the 1/4/16-chip sweep, and
+    the shard_map execution backend under forced 8 host devices (recorded
+    under its own ``shard_map_smoke`` key so the sequential trajectory in
+    ``shard_sweep`` stays comparable across PRs)."""
     sys.path.insert(0, str(REPO / "src"))
     sys.path.insert(0, str(REPO))
     import jax
@@ -93,15 +121,25 @@ def run_shard_smoke(out: Path) -> bool:
 
     payload = {"bit_exact_1x1": bit_exact, "shard_sweep": shard_sweep_points()}
     wall = time.perf_counter() - t0
+    # the backend smoke is a fresh-jax-init subprocess: budgeted separately
+    # so the in-process smoke budget keeps meaning across PRs
+    t0_b = time.perf_counter()
+    payload["shard_map_smoke"] = run_backend_smoke()
+    backend_wall = time.perf_counter() - t0_b
+    payload["shard_map_smoke"]["wall_s"] = backend_wall
     payload["wall_s"] = wall
     out.write_text(json.dumps(payload, indent=2, default=float))
     print(f"[ci_check] shard smoke: {len(payload['shard_sweep'])} mesh points in "
-          f"{wall:.1f}s -> {out}")
+          f"{wall:.1f}s (+{backend_wall:.1f}s backend subprocess) -> {out}")
     if not bit_exact:
         print("[ci_check] FAIL: 1x1-mesh sharded execution is not bit-exact")
         return False
     if wall > SMOKE_BUDGET_S:
         print(f"[ci_check] FAIL: shard smoke took {wall:.1f}s > {SMOKE_BUDGET_S}s budget")
+        return False
+    if backend_wall > 2 * SMOKE_BUDGET_S:
+        print(f"[ci_check] FAIL: backend smoke took {backend_wall:.1f}s > "
+              f"{2 * SMOKE_BUDGET_S}s budget")
         return False
     xchip = {p["n_chips"]: p["crosschip_bits_per_pass"] for p in payload["shard_sweep"]}
     if xchip.get(1, 1) != 0:
@@ -110,6 +148,25 @@ def run_shard_smoke(out: Path) -> bool:
     if not all(bits > 0 for chips, bits in xchip.items() if chips > 1):
         print(f"[ci_check] FAIL: multi-chip mesh reports no reduce-scatter traffic: {xchip}")
         return False
+    sm = payload["shard_map_smoke"]
+    if "error" in sm:
+        print(f"[ci_check] FAIL: shard_map backend smoke failed: {sm['error']}")
+        return False
+    by_mesh = {p["mesh"]: p for p in sm.get("points", [])}
+    p11, p22 = by_mesh.get("1x1"), by_mesh.get("2x2")
+    if not (p11 and p22):
+        print(f"[ci_check] FAIL: shard_map smoke missing mesh points: {sorted(by_mesh)}")
+        return False
+    if not p11.get("shard_map_available") or not p11.get("bit_exact_1x1_vs_execute"):
+        print(f"[ci_check] FAIL: 1x1 shard_map not bit-exact vs execute_matmul: {p11}")
+        return False
+    if p22.get("backend_auto") != "shard_map" or p22.get("max_abs_diff_vs_sequential", 1.0) > 1e-4:
+        print(f"[ci_check] FAIL: 2x2 shard_map diverges from sequential: {p22}")
+        return False
+    print(
+        f"[ci_check] shard_map backend smoke: {sm['devices']} devices, 1x1 bit-exact, "
+        f"2x2 maxdiff {p22['max_abs_diff_vs_sequential']:.2e}"
+    )
     return True
 
 
