@@ -7,13 +7,17 @@ the chip-level trajectory. ``shard_sweep_points`` extends the sweep across
 1- / 4- / 16-chip meshes (``repro.fabric.shard``), reporting per-layer
 on-chip EMA vs cross-chip reduce-scatter traffic; ``shard_backend_smoke``
 executes the sharded matmul numerically through both chip backends
-(sequential host loop vs real multi-device ``shard_map``) and compares.
-Doubles as the ``fabric`` entry of ``benchmarks/run.py`` and the <30 s smoke
-benchmark of ``tools/ci_check.py``.
+(sequential host loop vs real multi-device ``shard_map``) and compares;
+``program_smoke`` runs the whole-model fused forward
+(``repro.fabric.program``) against the per-layer loop and records the
+measured-vs-modeled link-latency ratio. Doubles as the ``fabric`` entry of
+``benchmarks/run.py`` and the <30 s smoke benchmark of ``tools/ci_check.py``.
 
   PYTHONPATH=src python -m benchmarks.fabric_sweep [--out BENCH_fabric.json]
   PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m benchmarks.fabric_sweep --backend-smoke
+  PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m benchmarks.fabric_sweep --program-smoke
 """
 
 from __future__ import annotations
@@ -188,6 +192,79 @@ def shard_backend_smoke(meshes=((1, 1), (2, 2))) -> dict:
     return out
 
 
+def program_smoke(mesh=(2, 2)) -> dict:
+    """Fused whole-model forward smoke (``repro.fabric.program``): compile a
+    small 3-layer chain, check 1x1 bit-exactness (noisy ADC included) and
+    multi-chip agreement vs the per-layer ``execute_sharded_matmul`` loop,
+    count the fused program's collectives, and record the measured-vs-modeled
+    link-latency ratio. Meant for forced host devices
+    (``python -m benchmarks.fabric_sweep --program-smoke`` inside
+    ``tools/ci_check.py``'s 8-device subprocess -> ``BENCH_fabric_program.json``).
+    """
+    import jax
+    import numpy as np
+
+    from repro.core.cim_linear import CiMConfig
+    from repro.fabric import (
+        ChipMeshConfig,
+        FabricConfig,
+        compile_forward,
+        map_matmul,
+        measure_forward,
+        per_layer_forward,
+        shard_placement,
+    )
+
+    fb = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+    noisy = CiMConfig(
+        mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False,
+        comparator_sigma=0.05,
+    )
+    shapes = [("l0", 4, 64, 64), ("l1", 4, 64, 96), ("l2", 4, 96, 32)]
+
+    def chain(cm):
+        return [
+            shard_placement(map_matmul(n, m, k, nn, fb, cim=noisy), cm)
+            for n, m, k, nn in shapes
+        ]
+
+    nk = jax.random.PRNGKey(7)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    out = {"devices": len(jax.devices()), "mesh": f"{mesh[0]}x{mesh[1]}"}
+
+    # 1x1: the fused program must be bit-for-bit the per-layer loop
+    cm1 = ChipMeshConfig(fabric=fb)
+    prog1 = compile_forward(chain(cm1), cm1, noisy)
+    ws = prog1.random_weights(jax.random.PRNGKey(1))
+    y1 = np.asarray(prog1(x, ws, key=nk))
+    y1_ref = np.asarray(
+        per_layer_forward(x, ws, prog1.placements, cm1, noisy, key=nk,
+                          backend="sequential")
+    )
+    out["backend_1x1"] = prog1.backend
+    out["bit_exact_1x1"] = bool((y1 == y1_ref).all())
+
+    # multi-chip: float agreement + collective census + measured timings
+    cmn = ChipMeshConfig(data=mesh[0], model=mesh[1], fabric=fb)
+    prog = compile_forward(chain(cmn), cmn, noisy)
+    out["backend"] = prog.backend
+    out["problems"] = prog.problems
+    y = np.asarray(prog(x, ws, key=nk))
+    y_ref = np.asarray(
+        per_layer_forward(x, ws, prog.placements, cmn, noisy, key=nk,
+                          backend="sequential")
+    )
+    out["max_abs_diff_vs_per_layer"] = float(np.abs(y - y_ref).max())
+    if prog.backend == "shard_map":
+        out["collectives"] = prog.collective_counts(x, ws, key=nk)
+    out["measure"] = measure_forward(
+        prog, x=x, weights=ws, key=nk, iters=2,
+        per_layer_backend="sequential", per_layer_iters=1,
+    )
+    out["measured_over_modeled"] = out["measure"]["measured_over_modeled"]
+    return out
+
+
 def fabric_mapping_smoke() -> dict:
     """Map a smollm block on a hybrid fabric — the perf-trajectory anchor."""
     from repro.configs.registry import get_config
@@ -257,9 +334,19 @@ def main():
         help="print the shard_backend_smoke() JSON to stdout and exit "
         "(tools/ci_check.py runs this in a forced-8-device subprocess)",
     )
+    ap.add_argument(
+        "--program-smoke",
+        action="store_true",
+        help="print the program_smoke() JSON (fused whole-model forward vs "
+        "per-layer loop + measured/modeled link latency) to stdout and exit "
+        "(tools/ci_check.py runs this in a forced-8-device subprocess)",
+    )
     args = ap.parse_args()
     if args.backend_smoke:
         print(json.dumps(shard_backend_smoke(), indent=2, default=float))
+        return
+    if args.program_smoke:
+        print(json.dumps(program_smoke(), indent=2, default=float))
         return
     t0 = time.perf_counter()
     # shard-sweep data is written by tools/ci_check.py to BENCH_fabric_shard.json

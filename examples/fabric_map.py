@@ -13,7 +13,12 @@ Demonstrates the chip-level story of the paper end to end:
   4. shard the mapped block across a 2x2 chip mesh (``repro.fabric.shard``):
      verify the 1x1-mesh sharded run is bit-exact vs the unsharded executor,
      and print the mesh rollup separating on-chip EMA from cross-chip
-     reduce-scatter traffic.
+     reduce-scatter traffic;
+  5. compile the block's forward CHAIN (q -> o -> gate -> down) into ONE
+     fused shard_map program (``repro.fabric.compile_forward``): layer i's
+     reduce-scatter output stays sharded as layer i+1's input, one
+     all-gather total, bit-exact vs the per-layer loop — and report the
+     measured-vs-modeled link latency (``measure_forward``).
 
   PYTHONPATH=src python examples/fabric_map.py
 """
@@ -108,6 +113,33 @@ def main():
     rep1 = sharded_fabric_report(shard_model(cfg, cm1, tokens=4, block_only=True), cm1)
     assert rep1["totals"]["crosschip_bits_per_pass"] == 0, "1 chip has no links"
     assert t["tiles_per_chip"] < rep1["totals"]["tiles_per_chip"], "K-split shrinks per-chip load"
+
+    # --- whole-model fused forward (repro.fabric.program) -------------------
+    from repro.fabric import compile_forward, measure_forward, per_layer_forward
+
+    prog = compile_forward(cfg, cm1, cim=cim_bp, tokens=4, block_only=True)
+    names = [sp.name for sp in prog.placements]
+    print(f"\n[program]    block forward chain: {names} ({prog.backend})")
+    xc = jax.random.normal(jax.random.PRNGKey(3), (prog.m, prog.placements[0].k))
+    wsc = prog.random_weights(jax.random.PRNGKey(4))
+    y_fused = np.asarray(prog(xc, wsc))
+    y_loop = np.asarray(
+        per_layer_forward(xc, wsc, prog.placements, cm1, cim_bp, backend="sequential")
+    )
+    exact = bool((y_fused == y_loop).all())
+    print(f"[program]    fused 1x1 forward == per-layer loop: {exact}")
+    assert exact, "fused forward diverged from the per-layer loop"
+    if prog.backend == "shard_map":
+        counts = prog.collective_counts(xc, wsc)
+        print(f"[program]    collectives in the whole forward: {counts}")
+        assert counts["all_gather"] <= 1, "fused forward must gather at most once"
+    meas = measure_forward(prog, x=xc, weights=wsc, iters=1,
+                           per_layer_backend="sequential")
+    print(
+        f"[program]    fused {meas.get('fused_s', float('nan'))*1e3:.3g} ms vs "
+        f"per-layer loop {meas['per_layer_s']*1e3:.3g} ms wall; modeled link "
+        f"{meas['modeled_link_s']*1e3:.3g} ms"
+    )
 
     print("\nfabric_map: all chip-level checks passed.")
 

@@ -18,6 +18,10 @@ accesses because more weights stay resident. This package models that chip:
     over N arrays (role swapping, shared flash-bank arbitration) extending
     ``core.schedule``; chip throughput / utilization and the iso-area
     throughput-recovery comparison.
+  * :mod:`repro.fabric.tiles` — THE per-(column-tile, K-shard) inner loop
+    (``column_tile_matmul`` + analytic ``fake_quant`` stats) every executor
+    shares; one definition is what keeps the single-chip, sequential-loop,
+    shard_map, and fused whole-model paths bit-for-bit interchangeable.
   * :mod:`repro.fabric.execute` — batched numerical execution of a mapped
     placement through the ``core.cim_linear`` machinery; a mapped layer
     matches the unmapped op bit-for-bit (noiseless ADC).
@@ -34,6 +38,14 @@ accesses because more weights stay resident. This package models that chip:
     ``sharded_fabric_report`` separates on-chip EMA from cross-chip link
     traffic and reports double-buffered round-overlap latency
     (``overlapped_mesh_latency``).
+  * :mod:`repro.fabric.program` — compile a whole mapped model into ONE
+    fused shard_map forward (``compile_forward`` -> ``FabricProgram``):
+    layer i's reduce-scatter output stays sharded as layer i+1's input,
+    one all-gather at the end, per-layer ``fold_in`` noise keys; bit-exact
+    vs the per-layer ``execute_sharded_matmul`` loop on a 1x1 mesh.
+    ``measure_forward`` wall-clocks the fused collectives and
+    ``pipeline.link_validation`` reports them next to the modeled link
+    latency.
 
 Paper-figure correspondence: Fig. 1 (networking configurations) ->
 ``FabricConfig.mode``; Fig. 2 (pair SAR role swap) -> ``pair_sar`` groups;
@@ -44,13 +56,27 @@ See ``docs/fabric.md`` for the full architecture guide.
 """
 
 from repro.fabric.execute import execute_linear, execute_matmul
-from repro.fabric.mapper import LayerPlacement, map_matmul, map_model, model_matmuls
+from repro.fabric.mapper import (
+    LayerPlacement,
+    map_matmul,
+    map_model,
+    model_forward_chain,
+    model_matmuls,
+)
 from repro.fabric.pipeline import (
     fabric_throughput,
     iso_area_comparison,
+    link_validation,
     overlap_rounds,
     overlapped_mesh_latency,
     pipelined_schedule,
+)
+from repro.fabric.program import (
+    FabricProgram,
+    compile_forward,
+    measure_forward,
+    per_layer_forward,
+    program_eligibility,
 )
 from repro.fabric.report import fabric_report, render_markdown, sharded_fabric_report
 from repro.fabric.shard import (
@@ -60,6 +86,7 @@ from repro.fabric.shard import (
     shard_model,
     shard_placement,
 )
+from repro.fabric.tiles import analytic_cim_stats, column_tile_matmul
 from repro.fabric.topology import ChipMeshConfig, FabricConfig, arrays_for_area
 
 __all__ = [
@@ -70,11 +97,15 @@ __all__ = [
     "map_matmul",
     "map_model",
     "model_matmuls",
+    "model_forward_chain",
     "fabric_throughput",
     "iso_area_comparison",
     "overlap_rounds",
     "overlapped_mesh_latency",
+    "link_validation",
     "pipelined_schedule",
+    "column_tile_matmul",
+    "analytic_cim_stats",
     "execute_matmul",
     "execute_linear",
     "ShardedPlacement",
@@ -82,6 +113,11 @@ __all__ = [
     "shard_model",
     "resolve_backend",
     "execute_sharded_matmul",
+    "FabricProgram",
+    "compile_forward",
+    "per_layer_forward",
+    "measure_forward",
+    "program_eligibility",
     "fabric_report",
     "sharded_fabric_report",
     "render_markdown",

@@ -16,6 +16,10 @@ the same reduction slices the placement assigns to individual arrays, so the
 per-array partial sums are the ones actually accumulated. Exact equality with
 the unmapped op holds for the noiseless ADC; with comparator noise the mapped
 run draws per-tile keys and matches only in distribution.
+
+The per-column-tile inner loop itself lives in ``fabric.tiles`` — the single
+definition shared with ``fabric.shard`` (both backends) and the fused
+whole-model program (``fabric.program``).
 """
 
 from __future__ import annotations
@@ -28,11 +32,10 @@ import jax.numpy as jnp
 from repro.core.cim_linear import (
     CimStats,
     CiMConfig,
-    _bitplane_matmul,
-    _fake_quant_matmul,
     quantize_symmetric,
 )
 from repro.fabric.mapper import LayerPlacement, map_matmul
+from repro.fabric.tiles import analytic_cim_stats, column_tile_matmul
 from repro.fabric.topology import FabricConfig
 
 __all__ = ["execute_matmul", "execute_linear"]
@@ -52,6 +55,11 @@ def execute_matmul(
 
     ``x``: (..., K); ``w``: (K, N). Matches ``cim_matmul(x, w, cim)``
     bit-for-bit in both ``bitplane`` and ``fake_quant`` modes (noiseless ADC).
+
+    ``return_stats=True`` is meaningful in both modes: ``bitplane`` counts
+    the conversions/comparisons actually performed; ``fake_quant`` (kernel or
+    surrogate path) counts them analytically — tiles x plane-pairs x columns
+    (``fabric.tiles.analytic_cim_stats``).
 
     Example::
 
@@ -82,25 +90,15 @@ def execute_matmul(
     x_int, sx = quantize_symmetric(xm, cim.a_bits, cim.a_signed)
     w_int, sw = quantize_symmetric(w, cim.w_bits, cim.w_signed, per_axis=-1)
 
-    n_tiles = placement.n_tiles
     cols = fabric.cols
-    parts = []  # scaled per-column-tile outputs (scaling is column-local,
-    # so scaling a tile equals slicing the globally scaled result bit-for-bit)
-    conversions = jnp.zeros((), jnp.int32)
-    comparisons = jnp.zeros((), jnp.int32)
-    for nt in range(n_tiles):
-        n0, n1 = nt * cols, min((nt + 1) * cols, n)
-        if cim.mode == "bitplane":
-            tkey = jax.random.fold_in(key, nt) if key is not None else None
-            y_tile, st = _bitplane_matmul(x_int, w_int[:, n0:n1], cim, tkey)
-            conversions = conversions + st.conversions
-            comparisons = comparisons + st.comparisons
-            parts.append(y_tile * sx * sw[:, n0:n1])
-        elif use_kernel:
-            from repro.kernels.ops import cim_matmul_op
+    if cim.mode == "fake_quant" and use_kernel:
+        from repro.kernels.ops import cim_matmul_op
 
-            # the fused kernel re-derives the same per-tensor / per-column
-            # scales from the float operands and applies them itself
+        # the fused kernel re-derives the same per-tensor / per-column
+        # scales from the float operands and applies them itself
+        parts = []
+        for nt in range(placement.n_tiles):
+            n0, n1 = nt * cols, min((nt + 1) * cols, n)
             parts.append(
                 cim_matmul_op(
                     xm,
@@ -114,10 +112,15 @@ def execute_matmul(
                     w_signed=cim.w_signed,
                 )
             )
-        else:
-            y_tile, _ = _fake_quant_matmul(x_int, w_int[:, n0:n1], cim)
-            parts.append(y_tile * sx * sw[:, n0:n1])
-    y_q = jnp.concatenate(parts, axis=1)
+        y_q = jnp.concatenate(parts, axis=1)
+        # the kernel path performs the same tiles x plane-pairs x columns of
+        # conversions as the faithful path — count them analytically
+        stats = analytic_cim_stats(cim, xm.shape[0], placement.k_tiles, n)
+        conversions, comparisons = stats.conversions, stats.comparisons
+    else:
+        y_int, stats = column_tile_matmul(x_int, w_int, cim, cols, key=key)
+        conversions, comparisons = stats.conversions, stats.comparisons
+        y_q = y_int * sx * sw
 
     if cim.ste:
         y_lin = xm @ w

@@ -28,7 +28,14 @@ from repro.configs.base import ModelConfig
 from repro.core.cim_linear import CiMConfig
 from repro.fabric.topology import FabricConfig
 
-__all__ = ["TileAssignment", "LayerPlacement", "map_matmul", "map_model", "model_matmuls"]
+__all__ = [
+    "TileAssignment",
+    "LayerPlacement",
+    "map_matmul",
+    "map_model",
+    "model_matmuls",
+    "model_forward_chain",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -251,6 +258,49 @@ def model_matmuls(
             raise ValueError(cfg.family)
     out.append(("unembed", tokens, d, cfg.padded_vocab))
     return out
+
+
+def model_forward_chain(
+    cfg: ModelConfig, tokens: int, block_only: bool = False
+) -> List[Tuple[str, int, int, int]]:
+    """The maximal *chained* subset of :func:`model_matmuls`: starting from
+    the ``d_model`` residual stream, keep every matmul whose K equals the
+    previous kept matmul's N — the linears on the forward critical path,
+    where layer i's output IS layer i+1's input.
+
+    This is the workload ``fabric.program.compile_forward`` fuses into one
+    shard_map program: between chained linears the activation can stay
+    K-sharded across the mesh (the elementwise/attention-mixing ops elided
+    here never change the sharded layout). Sibling projections that branch
+    off the residual stream rather than continue it (``k_proj`` / ``v_proj``
+    / ``up_proj`` / the MoE ``router``) are skipped even when their K
+    happens to match, and MoE keeps only ``expert0`` — a token's critical
+    path runs through ONE activated expert; the other ``top_k - 1`` run in
+    parallel, not in series. A dense transformer therefore chains
+    ``q_proj -> o_proj -> gate_proj -> down_proj`` per layer plus the
+    unembed; families whose residual path is not a pure matmul chain (e.g.
+    Mamba's ``in_proj -> SSM -> out_proj``) yield shorter chains.
+
+    Example::
+
+        >>> from repro.configs.registry import get_config
+        >>> from repro.fabric import model_forward_chain
+        >>> [n for n, *_ in model_forward_chain(get_config("smollm-135m"), 4, block_only=True)]
+        ['block.q_proj', 'block.o_proj', 'block.gate_proj', 'block.down_proj']
+    """
+    siblings = ("k_proj", "v_proj", "up_proj", "router")
+    chain: List[Tuple[str, int, int, int]] = []
+    cur = cfg.d_model
+    for name, m, k, n in model_matmuls(cfg, tokens, block_only=block_only):
+        parts = name.split(".")
+        if parts[-1] in siblings:
+            continue
+        if any(p.startswith("expert") and p != "expert0" for p in parts):
+            continue  # parallel experts: only one is on a token's critical path
+        if k == cur:
+            chain.append((name, m, k, n))
+            cur = n
+    return chain
 
 
 def map_model(

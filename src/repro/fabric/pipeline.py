@@ -24,7 +24,7 @@ reproducing the paper's throughput-recovery claim.
 
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 from repro.core.schedule import ScheduleResult, Slot, pair_sar_schedule
 from repro.fabric.topology import FabricConfig
@@ -36,6 +36,7 @@ __all__ = [
     "conversion_cycles",
     "overlap_rounds",
     "overlapped_mesh_latency",
+    "link_validation",
 ]
 
 
@@ -241,11 +242,58 @@ def overlapped_mesh_latency(sharded: Sequence, n_conversions: int = 96) -> dict:
     overlapped = overlap_rounds(compute, link)
     hidden = serial - overlapped
     total_link = sum(link)
+    # hidden == sum(min(compute_i, link_{i-1})) lies in [0, total_link] by
+    # construction; the clamp only guards float subtraction slop at the
+    # link >= compute boundary (everything hidden) and the zero-link end
+    fraction = min(1.0, max(0.0, hidden / total_link)) if total_link > 0 else 0.0
     return {
         "serial_latency_s": serial,
         "overlapped_latency_s": overlapped,
         "hidden_link_s": hidden,
-        "link_hidden_fraction": hidden / total_link if total_link > 0 else 0.0,
+        "link_hidden_fraction": fraction,
+    }
+
+
+def link_validation(
+    sharded: Sequence, measured_collective_s: Optional[float], n_conversions: int = 96
+) -> dict:
+    """Measured-vs-modeled link latency for one forward pass — the
+    validation loop the fused program closes.
+
+    ``measured_collective_s`` is the fused program's collective wall time
+    (``fabric.program.measure_forward``: fused minus collective-stripped,
+    block-until-ready, host-simulation seconds); the modeled side is
+    :func:`overlapped_mesh_latency`'s prediction in fabric seconds (10 MHz
+    conversion clock, ``link_bits_per_s`` links). The two clock domains
+    differ, so ``measured_over_modeled`` is a calibration constant tracked
+    across PRs (``BENCH_fabric_program.json``), not a number expected to
+    be 1; ``None`` when the mesh has no links or nothing was measured.
+
+    Example::
+
+        >>> from repro.fabric import ChipMeshConfig, FabricConfig, map_matmul, shard_placement
+        >>> fb = FabricConfig(mode="pair_sar", n_arrays=8)
+        >>> cm = ChipMeshConfig(model=2, fabric=fb)
+        >>> sps = [shard_placement(map_matmul(f"l{i}", 4, 64, 64, fb), cm) for i in range(2)]
+        >>> v = link_validation(sps, measured_collective_s=1e-3)
+        >>> v["modeled_link_s"] > 0 and v["measured_over_modeled"] > 0
+        True
+    """
+    ov = overlapped_mesh_latency(sharded, n_conversions)
+    modeled = sum(sp.crosschip_latency_s for sp in sharded)
+    ratio = (
+        measured_collective_s / modeled
+        if measured_collective_s is not None and modeled > 0
+        else None
+    )
+    return {
+        "modeled_link_s": modeled,
+        "modeled_serial_latency_s": ov["serial_latency_s"],
+        "modeled_overlapped_latency_s": ov["overlapped_latency_s"],
+        "modeled_hidden_link_s": ov["hidden_link_s"],
+        "modeled_link_hidden_fraction": ov["link_hidden_fraction"],
+        "measured_collective_s": measured_collective_s,
+        "measured_over_modeled": ratio,
     }
 
 

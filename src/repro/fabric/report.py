@@ -135,6 +135,7 @@ def sharded_fabric_report(
     sharded: list,
     chip_mesh: ChipMeshConfig,
     n_conversions: int = 96,
+    measured: Optional[dict] = None,
 ) -> dict:
     """Mesh-level rollup of :class:`~repro.fabric.shard.ShardedPlacement`s.
 
@@ -146,6 +147,10 @@ def sharded_fabric_report(
     K-parallel partial sums), its link energy, and its link latency.
     Residency is per chip: each model-axis chip only has to hold its own
     K-shard, which is how a mesh turns a reload-bound model resident.
+
+    ``measured`` (a ``fabric.program.measure_forward`` dict) attaches the
+    fused program's measured-vs-modeled link-latency validation as a
+    ``program_validation`` section, rendered next to the overlap totals.
 
     Example::
 
@@ -227,6 +232,8 @@ def sharded_fabric_report(
         "layers": layers,
         "totals": totals,
     }
+    if measured is not None:
+        report["program_validation"] = measured
     return report
 
 
@@ -313,6 +320,27 @@ def render_markdown(report: dict, max_layers: Optional[int] = 24) -> str:
             else ""
         ),
     ]
+    if "program_validation" in report:
+        pv = report["program_validation"]
+        ratio = pv.get("measured_over_modeled")
+        meas = pv.get("measured_collective_s")
+        line = (
+            f"**fused program** ({pv.get('n_layers', '?')} layers, "
+            f"{pv.get('backend', '?')}): "
+        )
+        if pv.get("fused_s") is not None:
+            line += (
+                f"forward {pv['fused_s']*1e3:.3g} ms wall vs per-layer loop "
+                f"{pv['per_layer_s']*1e3:.3g} ms "
+                f"({pv.get('fused_speedup_vs_per_layer', 0.0):.2f}x); "
+            )
+        line += (
+            f"collectives measured "
+            f"{'n/a' if meas is None else f'{meas*1e3:.3g} ms wall'} vs modeled "
+            f"link {pv.get('modeled_link_s', 0.0)*1e3:.3g} ms fabric-time"
+            + (f" (calibration ratio {ratio:.3g})" if ratio is not None else "")
+        )
+        out += ["", line]
     if "paper_ratios" in report:
         pr = report["paper_ratios"]
         iso = report["iso_area"]

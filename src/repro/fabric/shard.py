@@ -54,11 +54,10 @@ from repro.configs.base import ModelConfig
 from repro.core.cim_linear import (
     CimStats,
     CiMConfig,
-    _bitplane_matmul,
-    _fake_quant_matmul,
     quantize_symmetric,
 )
 from repro.fabric.mapper import LayerPlacement, map_matmul, model_matmuls
+from repro.fabric.tiles import column_tile_matmul
 from repro.fabric.topology import ChipMeshConfig
 from repro.launch import shardings as sh
 from repro.launch.mesh import make_chip_mesh
@@ -211,9 +210,14 @@ def shard_model(
     tokens: int = 1,
     cim: Optional[CiMConfig] = None,
     block_only: bool = False,
+    matmuls: Optional[List[tuple]] = None,
 ) -> List[ShardedPlacement]:
     """Map every linear of ``cfg`` onto the mesh (``map_model`` per chip-shard,
     round-robin array offsets preserved across layers).
+
+    ``matmuls`` overrides the ``(name, M, K, N)`` list (default: all of
+    ``model_matmuls``) — ``fabric.program`` passes the forward chain through
+    here so both planners share ONE offset-bookkeeping walk.
 
     Example::
 
@@ -224,9 +228,11 @@ def shard_model(
         >>> len(sps), sps[0].k_splits
         (7, 4)
     """
+    if matmuls is None:
+        matmuls = model_matmuls(cfg, tokens, block_only=block_only)
     out: List[ShardedPlacement] = []
     offset = 0
-    for name, m, k, n in model_matmuls(cfg, tokens, block_only=block_only):
+    for name, m, k, n in matmuls:
         p = map_matmul(name, m, k, n, chip_mesh.fabric, cim=cim)
         sp = shard_placement(p, chip_mesh, array_offset=offset)
         offset = (offset + sp.chip.n_weight_tiles) % chip_mesh.fabric.n_compute_arrays
@@ -318,7 +324,6 @@ def _shard_map_matmul(x_int, w_int, sx, sw, sharded: ShardedPlacement, cim: CiMC
     k_splits, d_splits = sharded.k_splits, sharded.d_splits
     n = w_int.shape[1]
     cols = fabric.cols
-    n_tiles = math.ceil(n / cols)
     k_tiles = math.ceil(sharded.k / fabric.rows)
     mesh = make_chip_mesh(d_splits, k_splits, require_concrete=True)
 
@@ -337,20 +342,9 @@ def _shard_map_matmul(x_int, w_int, sx, sw, sharded: ShardedPlacement, cim: CiMC
         chip_key = (
             _chip_noise_key(maybe_key[0], di * k_splits + ci) if has_key else None
         )
-        parts = []
-        conversions = jnp.zeros((), jnp.int32)
-        comparisons = jnp.zeros((), jnp.int32)
-        for nt in range(n_tiles):
-            n0, n1 = nt * cols, min((nt + 1) * cols, n)
-            if cim.mode == "bitplane":
-                tkey = jax.random.fold_in(chip_key, nt) if has_key else None
-                y_t, st = _bitplane_matmul(x_blk, w_blk[:, n0:n1], cim, tkey)
-                conversions = conversions + st.conversions
-                comparisons = comparisons + st.comparisons
-            else:
-                y_t, _ = _fake_quant_matmul(x_blk, w_blk[:, n0:n1], cim)
-            parts.append(y_t)
-        y_local = jnp.concatenate(parts, axis=1)  # this chip's K-partial, (m_shard, N)
+        # this chip's K-partial, (m_shard, N) — the one shared inner loop
+        y_local, st = column_tile_matmul(x_blk, w_blk, cim, cols, key=chip_key)
+        conversions, comparisons = st.conversions, st.comparisons
         if k_splits > 1:
             if n % k_splits == 0:
                 # the modeled ring reduce-scatter, then the gather that hands
@@ -455,7 +449,6 @@ def execute_sharded_matmul(
         backend = "sequential"
     k_splits, d_splits = sharded.k_splits, sharded.d_splits
     k_tiles = math.ceil(k / fabric.rows)
-    n_tiles = math.ceil(n / fabric.cols)
     cols = fabric.cols
 
     # fabric-level quantization: global scales, exactly the unsharded front-end
@@ -476,29 +469,18 @@ def execute_sharded_matmul(
             m0 = d * m_shard
             m1 = (d + 1) * m_shard if d < d_splits - 1 else m_total
             x_d = x_int[m0:m1]
-            parts = []
-            for nt in range(n_tiles):
-                n0, n1 = nt * cols, min((nt + 1) * cols, n)
-                w_tile = w_int[:, n0:n1]
-                total = None
-                for c in range(k_splits):
-                    k0, k1 = _k_slice(k, fabric.rows, k_tiles, k_splits, c)
-                    if cim.mode == "bitplane":
-                        chip_key = _chip_noise_key(key, d * k_splits + c)
-                        tkey = (
-                            jax.random.fold_in(chip_key, nt)
-                            if chip_key is not None
-                            else None
-                        )
-                        y_c, st = _bitplane_matmul(x_d[:, k0:k1], w_tile[k0:k1], cim, tkey)
-                        conversions = conversions + st.conversions
-                        comparisons = comparisons + st.comparisons
-                    else:
-                        y_c, _ = _fake_quant_matmul(x_d[:, k0:k1], w_tile[k0:k1], cim)
-                    # digital partial-sum combine == the reduce-scatter's sum
-                    total = y_c if total is None else total + y_c
-                parts.append(total * sx * sw[:, n0:n1])
-            data_parts.append(jnp.concatenate(parts, axis=1))
+            total = None
+            for c in range(k_splits):
+                k0, k1 = _k_slice(k, fabric.rows, k_tiles, k_splits, c)
+                chip_key = _chip_noise_key(key, d * k_splits + c)
+                y_c, st = column_tile_matmul(
+                    x_d[:, k0:k1], w_int[k0:k1], cim, cols, key=chip_key
+                )
+                conversions = conversions + st.conversions
+                comparisons = comparisons + st.comparisons
+                # digital partial-sum combine == the reduce-scatter's sum
+                total = y_c if total is None else total + y_c
+            data_parts.append(total * sx * sw)
         y_q = jnp.concatenate(data_parts, axis=0)
 
     if cim.ste:

@@ -1,0 +1,122 @@
+"""The shared per-(column-tile, K-shard) inner loop of every fabric executor.
+
+``fabric.execute`` (single chip), ``fabric.shard`` (both the sequential chip
+loop and the shard_map SPMD program), and ``fabric.program`` (the whole-model
+fused forward) all execute the same physical operation per chip: walk the
+output-column tiles of a quantized ``(M, K) @ (K, N)`` block, run each tile
+through ``core.cim_linear``'s per-plane machinery with a per-tile
+``fold_in(key, nt)`` noise key, and accumulate conversion/comparison stats.
+
+Before this module each path carried its own copy of that loop, and the
+bit-exactness guarantees between them rested on the copies never drifting.
+Now there is ONE definition — :func:`column_tile_matmul` — and the
+equivalence tests pin the callers to it.
+
+Stats are meaningful in BOTH fidelity modes: ``bitplane`` counts the actual
+ADC conversions / comparator firings performed by ``_bitplane_matmul``;
+``fake_quant`` (a vectorized surrogate with no explicit per-plane loop)
+counts them analytically via :func:`analytic_cim_stats` — the same
+``planes x M x k-tiles x N`` formula as ``LayerPlacement.conversions`` and
+``core.cim_linear.digitization_stats``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim_linear import (
+    CimStats,
+    CiMConfig,
+    _bitplane_matmul,
+    _fake_quant_matmul,
+)
+
+__all__ = ["column_tile_matmul", "analytic_cim_stats"]
+
+
+def analytic_cim_stats(cim: CiMConfig, m: int, k_tiles: int, n: int) -> CimStats:
+    """Analytic digitization stats for one executed ``(m, k_tiles*rows, n)``
+    block: every (input-plane x weight-plane) pair of every
+    (row, k-tile, output-column) triple is one conversion; expected
+    comparator firings follow the configured search tree under the Binomial
+    MAV model (``core.search_tree`` / ``core.mav_stats``) — exactly
+    ``digitization_stats``'s accounting, shaped as a :class:`CimStats`.
+
+    Example::
+
+        >>> from repro.core.cim_linear import CiMConfig
+        >>> cim = CiMConfig(mode="fake_quant", a_bits=4, w_bits=4, adc_bits=5, rows=16)
+        >>> st = analytic_cim_stats(cim, m=2, k_tiles=3, n=8)
+        >>> int(st.conversions), int(st.comparisons) > 0
+        (768, True)
+    """
+    from repro.core.mav_stats import analytic_code_pmf
+
+    conversions = cim.a_bits * cim.w_bits * m * k_tiles * n
+    pmf = analytic_code_pmf(cim.rows, cim.adc_bits)
+    e_cmp = cim.search_tree().expected_depth(pmf)
+    return CimStats(
+        conversions=jnp.asarray(conversions, jnp.int32),
+        comparisons=jnp.asarray(round(conversions * float(e_cmp)), jnp.int32),
+    )
+
+
+def column_tile_matmul(
+    x_int: jnp.ndarray,
+    w_int: jnp.ndarray,
+    cim: CiMConfig,
+    cols: int,
+    key: Optional[jax.Array] = None,
+) -> Tuple[jnp.ndarray, CimStats]:
+    """Execute one chip's quantized block tile-by-tile over its output columns.
+
+    ``x_int``: (M, K) integer-valued activations; ``w_int``: (K, N)
+    integer-valued weights (this chip's K-shard). Output-column tile ``nt``
+    covers columns ``[nt*cols, (nt+1)*cols)`` and draws its ADC noise from
+    ``fold_in(key, nt)`` — the derivation every fabric executor shares, which
+    is what keeps the single-chip, sequential-chip-loop, shard_map, and fused
+    whole-model paths bit-for-bit interchangeable.
+
+    Returns the UNSCALED integer-valued result ``(M, N)`` plus
+    :class:`CimStats` (actual counts in ``bitplane`` mode, analytic in
+    ``fake_quant`` — multiplying by the caller's ``sx * sw`` afterwards is
+    bit-identical to scaling each tile before concatenation, since the
+    per-column scales broadcast tile-locally).
+
+    Example::
+
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.core.cim_linear import CiMConfig, quantize_symmetric
+        >>> cim = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+        >>> x_int, _ = quantize_symmetric(jax.random.normal(jax.random.PRNGKey(0), (2, 32)), 4, True)
+        >>> w_int, _ = quantize_symmetric(jax.random.normal(jax.random.PRNGKey(1), (32, 48)), 4, True, per_axis=-1)
+        >>> y, st = column_tile_matmul(x_int, w_int, cim, cols=32)
+        >>> y.shape, int(st.conversions)
+        ((2, 48), 3072)
+    """
+    n = w_int.shape[1]
+    if cim.mode != "bitplane":
+        # the fake_quant surrogate is column-independent (its quantizer step
+        # is config-only), so one full-width call is bit-identical to the
+        # per-tile walk and keeps the traced graph n_tiles-times smaller
+        y, _ = _fake_quant_matmul(x_int, w_int, cim)
+        k_tiles = math.ceil(x_int.shape[1] / cim.rows)
+        st = analytic_cim_stats(cim, x_int.shape[0], k_tiles, n)
+        return y, st
+    n_tiles = math.ceil(n / cols)
+    parts = []
+    conversions = jnp.zeros((), jnp.int32)
+    comparisons = jnp.zeros((), jnp.int32)
+    for nt in range(n_tiles):
+        n0, n1 = nt * cols, min((nt + 1) * cols, n)
+        tkey = jax.random.fold_in(key, nt) if key is not None else None
+        y_t, st = _bitplane_matmul(x_int, w_int[:, n0:n1], cim, tkey)
+        conversions = conversions + st.conversions
+        comparisons = comparisons + st.comparisons
+        parts.append(y_t)
+    y = parts[0] if n_tiles == 1 else jnp.concatenate(parts, axis=1)
+    return y, CimStats(conversions, comparisons)

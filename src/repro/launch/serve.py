@@ -25,7 +25,31 @@ from repro.configs.registry import get_config
 from repro.core.cim_linear import CiMConfig
 from repro.models import build_model
 
-__all__ = ["ServeSettings", "serve_batch"]
+__all__ = ["ServeSettings", "serve_batch", "parse_fabric_mesh"]
+
+
+def parse_fabric_mesh(spec: str) -> tuple:
+    """Parse a ``--fabric-mesh`` ``DxM`` spec (e.g. ``2x4``) into
+    ``(data, model)`` and validate it against
+    ``repro.launch.mesh.make_chip_mesh`` — the same axis rules the shard
+    planner uses, so a spec that parses here is a mesh the planner accepts.
+
+    Example::
+
+        >>> parse_fabric_mesh("2x4")
+        (2, 4)
+    """
+    parts = spec.lower().replace(" ", "").split("x")
+    if len(parts) != 2:
+        raise ValueError(f"--fabric-mesh wants DxM (e.g. 2x4), got {spec!r}")
+    try:
+        data, model = int(parts[0]), int(parts[1])
+    except ValueError:
+        raise ValueError(f"--fabric-mesh wants integer axes, got {spec!r}") from None
+    from repro.launch.mesh import make_chip_mesh
+
+    make_chip_mesh(data, model)  # raises on axes < 1; abstract fallback is fine
+    return data, model
 
 
 @dataclasses.dataclass
@@ -145,8 +169,16 @@ def main():
         type=int,
         default=1,
         choices=[1, 4, 16],
-        help="shard the mapped fabric across a (data x model) chip mesh "
-        "(1 -> 1x1, 4 -> 2x2, 16 -> 4x4; repro.fabric.shard)",
+        help="square-mesh sugar for --fabric-mesh (1 -> 1x1, 4 -> 2x2, "
+        "16 -> 4x4; repro.fabric.shard)",
+    )
+    ap.add_argument(
+        "--fabric-mesh",
+        default=None,
+        metavar="DxM",
+        help="explicit (data x model) chip mesh, e.g. 2x4 — any axes "
+        "repro.launch.mesh.make_chip_mesh accepts; overrides the "
+        "--fabric-chips sugar (passing both is an error)",
     )
     ap.add_argument(
         "--fabric-backend",
@@ -155,6 +187,13 @@ def main():
         help="chip execution backend for the fabric validation pass: "
         "sequential host loop, real multi-device shard_map, or auto "
         "(shard_map when the host has the devices; repro.fabric.resolve_backend)",
+    )
+    ap.add_argument(
+        "--fabric-program",
+        action="store_true",
+        help="run the whole-model fused shard_map forward "
+        "(repro.fabric.compile_forward, one block chain) as the validation "
+        "pass and report measured-vs-modeled link latency",
     )
     args = ap.parse_args()
 
@@ -167,8 +206,10 @@ def main():
         cfg = dc.replace(cfg, cim=CiMConfig(mode=args.cim, ste=False))
     st = ServeSettings(batch=args.batch, prompt_len=args.prompt_len, gen_len=args.gen_len)
 
-    if args.fabric_chips > 1 and not args.fabric:
-        ap.error("--fabric-chips requires --fabric")
+    if (args.fabric_chips > 1 or args.fabric_mesh or args.fabric_program) and not args.fabric:
+        ap.error("--fabric-chips/--fabric-mesh/--fabric-program require --fabric")
+    if args.fabric_mesh and args.fabric_chips > 1:
+        ap.error("pass either --fabric-mesh or the --fabric-chips sugar, not both")
     rollup = None
     if args.fabric:
         # map (and optionally shard) BEFORE serving so the batching log line
@@ -191,9 +232,16 @@ def main():
         )
 
         fb = FabricConfig(mode=args.fabric, n_arrays=args.fabric_arrays)
-        if args.fabric_chips > 1:
-            side = {4: 2, 16: 4}[args.fabric_chips]
-            cm = ChipMeshConfig(data=side, model=side, fabric=fb)
+        if args.fabric_mesh:
+            try:
+                mesh_d, mesh_m = parse_fabric_mesh(args.fabric_mesh)
+            except ValueError as e:
+                ap.error(str(e))
+        else:
+            side = {1: 1, 4: 2, 16: 4}[args.fabric_chips]
+            mesh_d = mesh_m = side
+        if mesh_d * mesh_m > 1:
+            cm = ChipMeshConfig(data=mesh_d, model=mesh_m, fabric=fb)
             sps = shard_model(cfg, cm, tokens=st.batch)
             rollup = sharded_fabric_report(sps, cm)
         else:
@@ -226,6 +274,49 @@ def main():
             f"[serve] fabric exec backend: {backend} "
             f"({len(_jax.devices())} jax device(s) for {cm.n_chips} chip(s))"
         )
+
+        if args.fabric_program:
+            # whole-model fused forward (one block chain) as the validation
+            # pass: numeric check vs the per-layer loop plus the
+            # measured-vs-modeled link-latency table (repro.fabric.program)
+            import numpy as _np
+
+            from repro.fabric import compile_forward, measure_forward, per_layer_forward
+
+            val_cim = _CiM(
+                mode="bitplane", a_bits=4, w_bits=4, adc_bits=fb.adc_bits,
+                rows=fb.rows, ste=False,
+            )
+            prog = compile_forward(
+                cfg, cm, cim=val_cim, backend=args.fabric_backend,
+                tokens=st.batch, block_only=True,
+            )
+            xp = _jax.random.normal(
+                _jax.random.PRNGKey(2), (prog.m, prog.placements[0].k)
+            )
+            wsp = prog.random_weights(_jax.random.PRNGKey(3))
+            y_f = prog(xp, wsp)
+            y_l = per_layer_forward(
+                xp, wsp, prog.placements, cm, val_cim, backend="sequential"
+            )
+            maxdiff = float(_np.abs(_np.asarray(y_f) - _np.asarray(y_l)).max())
+            # per-layer baseline on the sequential loop: the auto-fallback
+            # path, and cheap enough to keep serving startup interactive
+            measured = measure_forward(
+                prog, x=xp, weights=wsp, iters=1,
+                per_layer_backend="sequential", per_layer_iters=1,
+            )
+            measured["max_abs_diff_vs_per_layer"] = maxdiff
+            rollup["program_validation"] = measured
+            mc = measured.get("measured_collective_s")
+            print(
+                f"[serve] fused program: {prog.n_layers}-layer block chain on "
+                f"{prog.backend}"
+                + (f" (fallback: {'; '.join(prog.problems)})" if prog.problems else "")
+                + f", maxdiff {maxdiff:.2e} vs per-layer loop; collectives "
+                + (f"{mc*1e3:.3g} ms wall" if mc is not None else "n/a")
+                + f" vs modeled link {measured['modeled_link_s']*1e3:.3g} ms"
+            )
 
     out = serve_batch(cfg, st, fabric_rollup=rollup)
     print(

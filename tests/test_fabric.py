@@ -209,6 +209,27 @@ def test_execute_bitplane_exactness_vs_integer_matmul():
     )
 
 
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_execute_fake_quant_stats_are_analytic(use_kernel):
+    """return_stats=True is meaningful in fake_quant mode (both the Pallas
+    kernel and the surrogate path): conversions are counted analytically —
+    plane-pairs x M x k-tiles x N — matching the placement's counter and
+    the bitplane path's actual count."""
+    fb = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+    cim = CiMConfig(mode="fake_quant", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (3, 40))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (40, 70))
+    _, st = execute_matmul(x, w, fb, cim, return_stats=True, use_kernel=use_kernel)
+    p = map_matmul("l", 3, 40, 70, fb, cim=cim)
+    assert int(st.conversions) == p.conversions > 0
+    assert int(st.comparisons) > 0
+    # the bitplane path performs exactly that many conversions for real
+    cim_bp = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+    _, st_bp = execute_matmul(x, w, fb, cim_bp, return_stats=True)
+    assert int(st_bp.conversions) == int(st.conversions)
+
+
 def test_execute_rejects_wrong_modes_and_rows():
     fb = FabricConfig(mode="pair_sar", rows=16, n_arrays=2)
     x = jnp.zeros((2, 16))

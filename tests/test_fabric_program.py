@@ -1,0 +1,280 @@
+"""Whole-model fused shard_map forward (``repro.fabric.program``): chain
+extraction, eligibility, 1x1 bit-exactness vs the per-layer
+``execute_sharded_matmul`` loop (noisy ADC included), multi-chip agreement,
+the at-most-one-all-gather collective census, and the measured-vs-modeled
+link-latency validation. ``tests/conftest.py`` forces 8 host devices."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.cim_linear import CiMConfig
+from repro.fabric import (
+    ChipMeshConfig,
+    FabricConfig,
+    compile_forward,
+    link_validation,
+    map_matmul,
+    measure_forward,
+    model_forward_chain,
+    per_layer_forward,
+    program_eligibility,
+    render_markdown,
+    shard_model,
+    shard_placement,
+    sharded_fabric_report,
+)
+
+FB = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+CIM_BP = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+NOISY = CiMConfig(
+    mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False,
+    comparator_sigma=0.05,
+)
+SHAPES = [("l0", 4, 64, 64), ("l1", 4, 64, 96), ("l2", 4, 96, 32)]
+
+
+def chain(cm, cim=CIM_BP, shapes=SHAPES):
+    return [
+        shard_placement(map_matmul(name, m, k, n, cm.fabric, cim=cim), cm)
+        for name, m, k, n in shapes
+    ]
+
+
+# ---------------------------------------------------------------------------
+# forward-chain extraction
+# ---------------------------------------------------------------------------
+
+
+def test_model_forward_chain_dense_block():
+    cfg = get_config("smollm-135m")
+    names = [n for n, *_ in model_forward_chain(cfg, 4, block_only=True)]
+    assert names == ["block.q_proj", "block.o_proj", "block.gate_proj", "block.down_proj"]
+    # consecutive layers chain dimensionally: N_i == K_{i+1}
+    shapes = model_forward_chain(cfg, 4, block_only=True)
+    for (_, _, _, n_prev), (_, _, k_next, _) in zip(shapes, shapes[1:]):
+        assert n_prev == k_next
+
+
+def test_model_forward_chain_moe_takes_one_expert():
+    """A token's critical path runs through ONE activated expert — the chain
+    must not string the top_k parallel experts in series."""
+    cfg = get_config("qwen3-moe-30b-a3b")
+    names = [n for n, *_ in model_forward_chain(cfg, 2, block_only=True)]
+    assert names == [
+        "block.q_proj", "block.o_proj",
+        "block.expert0.gate_proj", "block.expert0.down_proj",
+    ]
+    shapes = model_forward_chain(cfg, 2, block_only=True)
+    for (_, _, _, n_prev), (_, _, k_next, _) in zip(shapes, shapes[1:]):
+        assert n_prev == k_next
+
+
+def test_model_forward_chain_full_model_ends_at_unembed():
+    cfg = get_config("smollm-135m")
+    shapes = model_forward_chain(cfg, 2)
+    assert shapes[-1][0] == "unembed"
+    assert len(shapes) == 4 * cfg.n_layers + 1
+    for (_, _, _, n_prev), (_, _, k_next, _) in zip(shapes, shapes[1:]):
+        assert n_prev == k_next
+
+
+# ---------------------------------------------------------------------------
+# eligibility + compile-time errors
+# ---------------------------------------------------------------------------
+
+
+def test_program_eligibility_clean_chain():
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    assert program_eligibility(chain(cm), cm) == []
+    assert program_eligibility([], cm) == ["empty layer chain"]
+
+
+def test_program_eligibility_reports_chain_break_and_ragged_k():
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    broken = chain(cm, shapes=[("a", 4, 64, 64), ("b", 4, 96, 64)])
+    assert any("chain break" in p for p in program_eligibility(broken, cm))
+    # K=96 has 6 tiles (divides model=2) but 96 % (2*16) == 0, so make a
+    # genuinely tile-ragged K: 3 tiles on model=2 records a fallback
+    cmf = ChipMeshConfig(model=2, fabric=FB)
+    ragged = [shard_placement(map_matmul("r", 4, 40, 64, FB, cim=CIM_BP), cmf)]
+    probs = program_eligibility(ragged, cmf)
+    assert any("replication fallbacks" in p for p in probs)
+    # 16 chips > 8 forced devices
+    big = ChipMeshConfig(data=4, model=4, fabric=FB)
+    sp_big = [shard_placement(map_matmul("l", 16, 256, 64, FB, cim=CIM_BP), big)]
+    assert any("jax device" in p for p in program_eligibility(sp_big, big))
+
+
+def test_compile_forward_backend_resolution_and_errors():
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    assert compile_forward(chain(cm), cm, CIM_BP).backend == "shard_map"
+    assert compile_forward(chain(cm), cm, CIM_BP, backend="sequential").backend == "sequential"
+    big = ChipMeshConfig(data=4, model=4, fabric=FB)
+    sp_big = [shard_placement(map_matmul("l", 16, 256, 64, FB, cim=CIM_BP), big)]
+    # auto falls back with the reasons kept; explicit shard_map raises them
+    prog = compile_forward(sp_big, big, CIM_BP)
+    assert prog.backend == "sequential" and prog.problems
+    with pytest.raises(ValueError, match="fused shard_map program unavailable"):
+        compile_forward(sp_big, big, CIM_BP, backend="shard_map")
+    with pytest.raises(ValueError, match="ste=False"):
+        compile_forward(chain(cm), cm, CiMConfig(mode="bitplane", rows=16, ste=True))
+    with pytest.raises(ValueError):
+        compile_forward(chain(cm), cm, CiMConfig(mode="exact", ste=False))
+
+
+def test_program_call_validates_shapes():
+    cm = ChipMeshConfig(fabric=FB)
+    prog = compile_forward(chain(cm), cm, CIM_BP)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    ws = prog.random_weights(jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="weight matrices"):
+        prog(x, ws[:-1])
+    with pytest.raises(ValueError, match="expects weights"):
+        prog(x, list(reversed(ws)))
+    bad_x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+    with pytest.raises(ValueError, match="input features"):
+        prog(bad_x, ws)
+
+
+# ---------------------------------------------------------------------------
+# numerics: 1x1 bit-exact, multi-chip agreement
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cim,with_key", [(CIM_BP, False), (NOISY, True)])
+def test_fused_1x1_bit_exact_vs_per_layer_loop(cim, with_key):
+    """Acceptance: the fused program on a 1x1 mesh is bit-for-bit the loop
+    of execute_sharded_matmul calls — noisy ADC included (per-layer
+    fold_in(key, i) keys shared by both paths)."""
+    cm = ChipMeshConfig(fabric=FB)
+    prog = compile_forward(chain(cm, cim), cm, cim)
+    assert prog.backend == "shard_map"  # auto fuses even on one chip
+    key = jax.random.PRNGKey(7) if with_key else None
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    ws = prog.random_weights(jax.random.PRNGKey(1))
+    y = prog(x, ws, key=key)
+    y_ref = per_layer_forward(x, ws, prog.placements, cm, cim, key=key,
+                              backend="sequential")
+    assert (np.asarray(y) == np.asarray(y_ref)).all()
+
+
+@pytest.mark.parametrize("data,model", [(1, 2), (2, 1), (2, 2)])
+def test_fused_multichip_matches_sequential_loop(data, model):
+    """Acceptance: on a forced-device mesh the fused program matches the
+    sequential per-layer loop to float tolerance (the integer partial sums
+    make the reduce-scatter combine exact, so in practice it is equal)."""
+    cm = ChipMeshConfig(data=data, model=model, fabric=FB)
+    prog = compile_forward(chain(cm), cm, CIM_BP)
+    assert prog.backend == "shard_map"
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    ws = prog.random_weights(jax.random.PRNGKey(1))
+    y, st = prog(x, ws, return_stats=True)
+    y_ref, st_ref = per_layer_forward(
+        x, ws, prog.placements, cm, CIM_BP, backend="sequential", return_stats=True
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5, rtol=1e-6)
+    assert int(st.conversions) == int(st_ref.conversions)
+    assert int(st.comparisons) == int(st_ref.comparisons)
+    # noisy ADC: identical per-layer/chip/tile key derivation on both paths
+    progn = compile_forward(chain(cm, NOISY), cm, NOISY)
+    nk = jax.random.PRNGKey(9)
+    y_n = progn(x, ws, key=nk)
+    y_n_ref = per_layer_forward(x, ws, progn.placements, cm, NOISY, key=nk,
+                                backend="sequential")
+    np.testing.assert_allclose(np.asarray(y_n), np.asarray(y_n_ref), atol=1e-4, rtol=1e-5)
+
+
+def test_fused_fake_quant_matches_loop():
+    cim = CiMConfig(mode="fake_quant", a_bits=8, w_bits=8, adc_bits=5, rows=16, ste=False)
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    prog = compile_forward(chain(cm, cim), cm, cim)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 64))
+    ws = prog.random_weights(jax.random.PRNGKey(3))
+    y = prog(x, ws)
+    y_ref = per_layer_forward(x, ws, prog.placements, cm, cim, backend="sequential")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5, rtol=1e-6)
+
+
+def test_fused_batched_leading_dims_and_ragged_batch():
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    sps = chain(cm, shapes=[("l0", 8, 64, 64)])
+    prog = compile_forward(sps, cm, CIM_BP)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 64))  # flattens to 8 rows
+    ws = prog.random_weights(jax.random.PRNGKey(1))
+    y = prog(x, ws)
+    assert y.shape == (2, 4, 64)
+    y_ref = per_layer_forward(x, ws, sps, cm, CIM_BP, backend="sequential")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5, rtol=1e-6)
+    # a runtime batch not divisible by the data axis falls back (auto) and
+    # matches the sequential loop exactly
+    x5 = jax.random.normal(jax.random.PRNGKey(4), (5, 64))
+    y5 = prog(x5, ws)
+    y5_ref = per_layer_forward(x5, ws, sps, cm, CIM_BP, backend="sequential")
+    assert (np.asarray(y5) == np.asarray(y5_ref)).all()
+    strict = compile_forward(sps, cm, CIM_BP, backend="shard_map")
+    with pytest.raises(ValueError, match="not divisible by the data axis"):
+        strict(x5, ws)
+
+
+# ---------------------------------------------------------------------------
+# collectives: one all-gather for the WHOLE forward
+# ---------------------------------------------------------------------------
+
+
+def test_fused_forward_has_at_most_one_all_gather():
+    """Acceptance: counting collectives in the fused program's jaxpr — one
+    reduce_scatter per inter-layer combine, ONE all_gather total (the final
+    redistribution), no per-layer gather/re-scatter."""
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    prog = compile_forward(chain(cm), cm, CIM_BP)
+    counts = prog.collective_counts()
+    assert counts["all_gather"] == 1
+    assert counts["reduce_scatter"] == len(SHAPES)
+    assert counts["all_to_all"] == 0 and counts["ppermute"] == 0
+    # a single-chip mesh needs no gather at all
+    cm1 = ChipMeshConfig(fabric=FB)
+    prog1 = compile_forward(chain(cm1), cm1, CIM_BP)
+    counts1 = prog1.collective_counts()
+    assert counts1["all_gather"] == 0 and counts1["reduce_scatter"] == 0
+
+
+# ---------------------------------------------------------------------------
+# measured-vs-modeled link latency
+# ---------------------------------------------------------------------------
+
+
+def test_measure_forward_and_link_validation():
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    prog = compile_forward(chain(cm), cm, CIM_BP)
+    meas = measure_forward(prog, iters=1, per_layer_backend="sequential")
+    assert meas["backend"] == "shard_map" and meas["n_chips"] == 4
+    assert meas["fused_s"] > 0 and meas["local_s"] > 0 and meas["per_layer_s"] > 0
+    assert meas["measured_collective_s"] >= 0.0
+    assert meas["modeled_link_s"] > 0  # model axis > 1 -> links carry bits
+    assert meas["measured_over_modeled"] is not None
+    # link_validation handles the no-links / unmeasured cases
+    v = link_validation(prog.placements, None)
+    assert v["measured_over_modeled"] is None
+    cm1 = ChipMeshConfig(fabric=FB)
+    v1 = link_validation(chain(cm1), 1e-3)
+    assert v1["modeled_link_s"] == 0.0 and v1["measured_over_modeled"] is None
+
+
+def test_report_renders_program_validation():
+    cfg = get_config("smollm-135m")
+    cm = ChipMeshConfig(data=2, model=2, fabric=FabricConfig(mode="hybrid", n_arrays=252))
+    sps = shard_model(cfg, cm, tokens=4, block_only=True)
+    measured = {
+        "backend": "shard_map", "n_layers": 4, "fused_s": 1e-3,
+        "per_layer_s": 5e-3, "fused_speedup_vs_per_layer": 5.0,
+        "measured_collective_s": 2e-4, "modeled_link_s": 1e-6,
+        "measured_over_modeled": 200.0,
+    }
+    rep = sharded_fabric_report(sps, cm, measured=measured)
+    assert rep["program_validation"]["measured_over_modeled"] == 200.0
+    md = render_markdown(rep)
+    assert "fused program" in md and "calibration ratio" in md
+    # reports without a measured section render unchanged
+    assert "fused program" not in render_markdown(sharded_fabric_report(sps, cm))

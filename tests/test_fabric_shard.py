@@ -420,6 +420,43 @@ def test_overlap_rounds_math():
         overlap_rounds([1.0], [1.0, 2.0])
 
 
+def test_overlapped_mesh_latency_edge_cases():
+    """Empty layer list, single layer (nothing to overlap), and
+    link >= compute (fraction stays clamped to [0, 1])."""
+    # empty: all-zero report, no division by zero
+    r = overlapped_mesh_latency([])
+    assert r == {
+        "serial_latency_s": 0.0,
+        "overlapped_latency_s": 0.0,
+        "hidden_link_s": 0.0,
+        "link_hidden_fraction": 0.0,
+    }
+    # single layer: nothing overlaps — serial == overlapped, nothing hidden
+    cm = ChipMeshConfig(model=2, fabric=FB)
+    one = [shard_placement(map_matmul("l", 4, 64, 64, FB), cm)]
+    r1 = overlapped_mesh_latency(one)
+    assert r1["overlapped_latency_s"] == pytest.approx(r1["serial_latency_s"])
+    assert r1["hidden_link_s"] == pytest.approx(0.0)
+    assert r1["link_hidden_fraction"] == 0.0
+    # link >= compute: slow links dominate every round; the hidden fraction
+    # is compute-bounded and must stay within [0, 1]
+    slow = ChipMeshConfig(model=2, fabric=FB, link_bits_per_s=1e3)
+    sps = [shard_placement(map_matmul(f"l{i}", 4, 64, 64, FB), slow) for i in range(3)]
+    rs = overlapped_mesh_latency(sps)
+    assert all(sp.crosschip_latency_s > 0 for sp in sps)
+    compute_s = rs["serial_latency_s"] - sum(sp.crosschip_latency_s for sp in sps)
+    assert sps[0].crosschip_latency_s >= compute_s / 3  # links really dominate
+    assert 0.0 <= rs["link_hidden_fraction"] <= 1.0
+    assert rs["overlapped_latency_s"] <= rs["serial_latency_s"]
+    # pure math edges: link time fully hides compute-sized chunks only
+    assert overlap_rounds([1.0, 1.0], [5.0, 5.0]) == pytest.approx(1.0 + 5.0 + 5.0)
+    # a zero-link mesh hides nothing and reports fraction 0, not NaN
+    r0 = overlapped_mesh_latency(
+        [shard_placement(map_matmul("l", 4, 64, 64, FB), ChipMeshConfig(fabric=FB))]
+    )
+    assert r0["link_hidden_fraction"] == 0.0
+
+
 def test_report_overlap_totals():
     cfg = get_config("smollm-135m")
     cm = ChipMeshConfig(data=2, model=2, fabric=FabricConfig(mode="hybrid", n_arrays=252))

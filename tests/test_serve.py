@@ -9,9 +9,21 @@ import pytest
 
 from repro.configs import ARCHS, reduced
 from repro.core.cim_linear import CiMConfig
-from repro.launch.serve import ServeSettings, serve_batch
+from repro.launch.serve import ServeSettings, parse_fabric_mesh, serve_batch
 from repro.models import build_model
 from repro.models import layers as L
+
+
+def test_parse_fabric_mesh():
+    """--fabric-mesh DxM: any mesh make_chip_mesh accepts, loud errors else."""
+    assert parse_fabric_mesh("2x4") == (2, 4)
+    assert parse_fabric_mesh("1x1") == (1, 1)
+    assert parse_fabric_mesh("4X2") == (4, 2)  # case-insensitive
+    for bad in ("2x", "axb", "2x2x2", ""):
+        with pytest.raises(ValueError, match="fabric-mesh"):
+            parse_fabric_mesh(bad)
+    with pytest.raises(ValueError, match="axes must be >= 1"):
+        parse_fabric_mesh("0x2")
 
 
 def test_serve_batch_runs():

@@ -4,8 +4,11 @@ Runs the repo's tier-1 suite (ROADMAP.md), the fabric design-space sweep
 (``BENCH_fabric.json``), the multi-chip shard smoke — a local 1x1-mesh
 bit-exactness check, the 1/4/16-chip mesh sweep, and the shard_map
 execution backend run under forced 8 host devices (subprocess; separate
-``shard_map_smoke`` key), written to ``BENCH_fabric_shard.json`` — and the
-docs gate: ``README.md`` and
+``shard_map_smoke`` key), written to ``BENCH_fabric_shard.json`` — the
+fused whole-model forward smoke (``repro.fabric.program`` under forced 8
+host devices: bit-exact vs the per-layer loop, at most one all-gather,
+measured/modeled link-latency ratio -> ``BENCH_fabric_program.json``) — and
+the docs gate: ``README.md`` and
 ``docs/fabric.md`` must exist, every dotted ``repro.*`` reference in them
 must import, and every ``repro.fabric`` public symbol must be documented in
 ``docs/fabric.md``. Exits non-zero if any stage fails or a smoke benchmark
@@ -13,6 +16,7 @@ blows its time budget.
 
   python tools/ci_check.py [--skip-tests] [--out BENCH_fabric.json]
                            [--shard-out BENCH_fabric_shard.json]
+                           [--program-out BENCH_fabric_program.json]
 """
 
 from __future__ import annotations
@@ -67,10 +71,10 @@ def run_fabric_smoke(out: Path) -> bool:
     return True
 
 
-def run_backend_smoke() -> dict:
-    """Run the shard_map-vs-sequential backend smoke under forced 8 host
-    devices (subprocess: jax pins the device count at first init, so the
-    in-process smoke above cannot change it)."""
+def _run_forced_device_smoke(flag: str) -> dict:
+    """Run a benchmarks.fabric_sweep smoke under forced 8 host devices
+    (subprocess: jax pins the device count at first init, so the in-process
+    smokes above cannot change it)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + str(REPO) + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
@@ -79,7 +83,7 @@ def run_backend_smoke() -> dict:
     if "xla_force_host_platform_device_count" not in flags:
         env["XLA_FLAGS"] = (flags + " --xla_force_host_platform_device_count=8").strip()
     proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.fabric_sweep", "--backend-smoke"],
+        [sys.executable, "-m", "benchmarks.fabric_sweep", flag],
         cwd=REPO, env=env, capture_output=True, text=True,
     )
     if proc.returncode != 0:
@@ -88,6 +92,10 @@ def run_backend_smoke() -> dict:
         return json.loads(proc.stdout)
     except json.JSONDecodeError:
         return {"error": f"unparseable output: {proc.stdout[-2000:]}"}
+
+
+def run_backend_smoke() -> dict:
+    return _run_forced_device_smoke("--backend-smoke")
 
 
 def run_shard_smoke(out: Path) -> bool:
@@ -170,6 +178,52 @@ def run_shard_smoke(out: Path) -> bool:
     return True
 
 
+def run_program_smoke(out: Path) -> bool:
+    """Whole-model fused-forward smoke (``repro.fabric.program``) under
+    forced 8 host devices: the fused shard_map program must be bit-exact vs
+    the per-layer loop on a 1x1 mesh (noisy ADC included), agree to float
+    tolerance on the multi-chip mesh with at most ONE all-gather in the whole
+    forward, and the measured/modeled link-latency ratio is recorded to
+    ``BENCH_fabric_program.json`` for cross-PR tracking."""
+    t0 = time.perf_counter()
+    payload = _run_forced_device_smoke("--program-smoke")
+    wall = time.perf_counter() - t0
+    payload["wall_s"] = wall
+    out.write_text(json.dumps(payload, indent=2, default=float))
+    if "error" in payload:
+        print(f"[ci_check] FAIL: fused program smoke failed: {payload['error']}")
+        return False
+    ratio = payload.get("measured_over_modeled")
+    print(
+        f"[ci_check] fused program smoke: {payload['devices']} devices, "
+        f"mesh {payload['mesh']}, measured/modeled link ratio "
+        f"{'n/a' if ratio is None else f'{ratio:.3g}'} in {wall:.1f}s -> {out}"
+    )
+    if wall > 2 * SMOKE_BUDGET_S:
+        print(f"[ci_check] FAIL: program smoke took {wall:.1f}s > "
+              f"{2 * SMOKE_BUDGET_S}s budget")
+        return False
+    if not payload.get("bit_exact_1x1"):
+        print("[ci_check] FAIL: fused forward is not bit-exact vs the "
+              f"per-layer loop on a 1x1 mesh: {payload}")
+        return False
+    if payload.get("max_abs_diff_vs_per_layer", 1.0) > 1e-4:
+        print("[ci_check] FAIL: fused forward diverges from the per-layer "
+              f"loop: maxdiff {payload['max_abs_diff_vs_per_layer']}")
+        return False
+    if payload.get("backend") != "shard_map":
+        print(f"[ci_check] FAIL: fused program did not resolve to shard_map "
+              f"under forced devices: {payload.get('backend')} "
+              f"({payload.get('problems')})")
+        return False
+    gathers = payload.get("collectives", {}).get("all_gather")
+    if gathers is None or gathers > 1:
+        print(f"[ci_check] FAIL: fused forward should contain at most one "
+              f"all-gather, found {gathers}")
+        return False
+    return True
+
+
 def _resolve_dotted(ref: str) -> bool:
     """Import ``repro.a.b.C`` — module prefix via importlib, rest via getattr."""
     parts = ref.split(".")
@@ -221,6 +275,7 @@ def main():
     ap.add_argument("--skip-tests", action="store_true")
     ap.add_argument("--out", default=str(REPO / "BENCH_fabric.json"))
     ap.add_argument("--shard-out", default=str(REPO / "BENCH_fabric_shard.json"))
+    ap.add_argument("--program-out", default=str(REPO / "BENCH_fabric_program.json"))
     args = ap.parse_args()
 
     ok = True
@@ -232,6 +287,8 @@ def main():
         ok = run_fabric_smoke(Path(args.out))
     if ok:
         ok = run_shard_smoke(Path(args.shard_out))
+    if ok:
+        ok = run_program_smoke(Path(args.program_out))
     if ok:
         ok = check_docs()
     raise SystemExit(0 if ok else 1)
