@@ -10,14 +10,20 @@ executes the sharded matmul numerically through both chip backends
 (sequential host loop vs real multi-device ``shard_map``) and compares;
 ``program_smoke`` runs the whole-model fused forward
 (``repro.fabric.program``) against the per-layer loop and records the
-measured-vs-modeled link-latency ratio. Doubles as the ``fabric`` entry of
-``benchmarks/run.py`` and the <30 s smoke benchmark of ``tools/ci_check.py``.
+measured-vs-modeled link-latency ratio; ``graph_smoke`` runs the
+full-transformer-block fused GRAPH forward (``repro.fabric.graph``) with
+real ``init_transformer`` weights against the per-node reference and checks
+the collective census against the documented budget. Doubles as the
+``fabric`` entry of ``benchmarks/run.py`` and the <30 s smoke benchmark of
+``tools/ci_check.py``.
 
   PYTHONPATH=src python -m benchmarks.fabric_sweep [--out BENCH_fabric.json]
   PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m benchmarks.fabric_sweep --backend-smoke
   PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m benchmarks.fabric_sweep --program-smoke
+  PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m benchmarks.fabric_sweep --graph-smoke
 """
 
 from __future__ import annotations
@@ -265,6 +271,81 @@ def program_smoke(mesh=(2, 2)) -> dict:
     return out
 
 
+def graph_smoke(mesh=(2, 2)) -> dict:
+    """Full-transformer-block fused GRAPH smoke (``repro.fabric.graph``):
+    run REAL ``init_transformer`` weights through the fused graph forward —
+    siblings, attention mixing, norms, residuals — checking 1x1
+    bit-exactness vs the per-node reference (noisy ADC included),
+    multi-chip agreement, and the collective census against the documented
+    budget (per-sibling scatters enumerated, ONE trailing all-gather).
+    Meant for forced host devices
+    (``python -m benchmarks.fabric_sweep --graph-smoke`` inside
+    ``tools/ci_check.py``'s 8-device subprocess -> ``BENCH_fabric_graph.json``).
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs.base import ModelConfig
+    from repro.core.cim_linear import CiMConfig
+    from repro.fabric import (
+        ChipMeshConfig,
+        FabricConfig,
+        compile_graph_forward,
+        measure_forward,
+        transformer_graph_weights,
+    )
+    from repro.models.transformer import init_transformer
+
+    # graph-eligible on a 2x2 mesh: every K tile-aligns (64/128 % 32 == 0)
+    # and q/kv heads (4/2) divide the model axis. ONE block keeps the smoke
+    # inside the CI budget; the >=2-block acceptance lives in tier-1
+    # (tests/test_fabric_graph.py)
+    cfg = ModelConfig(
+        name="graph-smoke", family="dense", n_layers=1, d_model=64, vocab=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, pad_vocab_multiple=16,
+        param_dtype="float32", compute_dtype="float32",
+    )
+    fb = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+    noisy = CiMConfig(
+        mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False,
+        comparator_sigma=0.05,
+    )
+    params = init_transformer(jax.random.PRNGKey(0), cfg)
+    ws = transformer_graph_weights(params, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, cfg.d_model))
+    nk = jax.random.PRNGKey(7)
+    out = {"devices": len(jax.devices()), "mesh": f"{mesh[0]}x{mesh[1]}"}
+
+    # 1x1: the fused graph must be bit-for-bit the per-node reference
+    cm1 = ChipMeshConfig(fabric=fb)
+    prog1 = compile_graph_forward(cfg, cm1, noisy, tokens=8)
+    out["n_nodes"] = len(prog1.graph.nodes)
+    out["n_matmuls"] = len(prog1.placements)
+    out["backend_1x1"] = prog1.backend
+    y1 = np.asarray(prog1(x, ws, key=nk))
+    y1_ref = np.asarray(prog1.reference_forward(x, ws, key=nk))
+    out["bit_exact_1x1"] = bool((y1 == y1_ref).all())
+
+    # multi-chip: float agreement + census-vs-budget + measured timings
+    cmn = ChipMeshConfig(data=mesh[0], model=mesh[1], fabric=fb)
+    prog = compile_graph_forward(cfg, cmn, noisy, tokens=8)
+    out["backend"] = prog.backend
+    out["problems"] = prog.problems
+    y = np.asarray(prog(x, ws, key=nk))
+    y_ref = np.asarray(prog.reference_forward(x, ws, key=nk))
+    out["max_abs_diff_vs_reference"] = float(np.abs(y - y_ref).max())
+    if prog.backend == "shard_map":
+        out["collectives"] = prog.collective_counts(key=nk)
+        out["collective_budget"] = prog.collective_budget()
+        out["budget_match"] = out["collectives"] == out["collective_budget"]
+    out["measure"] = measure_forward(
+        prog, x=x, weights=ws, key=nk, iters=1,
+        per_layer_backend="sequential", per_layer_iters=1,
+    )
+    out["measured_over_modeled"] = out["measure"]["measured_over_modeled"]
+    return out
+
+
 def fabric_mapping_smoke() -> dict:
     """Map a smollm block on a hybrid fabric — the perf-trajectory anchor."""
     from repro.configs.registry import get_config
@@ -341,12 +422,23 @@ def main():
         "per-layer loop + measured/modeled link latency) to stdout and exit "
         "(tools/ci_check.py runs this in a forced-8-device subprocess)",
     )
+    ap.add_argument(
+        "--graph-smoke",
+        action="store_true",
+        help="print the graph_smoke() JSON (full-transformer-block fused "
+        "graph with real init_transformer weights vs the per-node reference "
+        "+ collective census vs budget) to stdout and exit "
+        "(tools/ci_check.py runs this in a forced-8-device subprocess)",
+    )
     args = ap.parse_args()
     if args.backend_smoke:
         print(json.dumps(shard_backend_smoke(), indent=2, default=float))
         return
     if args.program_smoke:
         print(json.dumps(program_smoke(), indent=2, default=float))
+        return
+    if args.graph_smoke:
+        print(json.dumps(graph_smoke(), indent=2, default=float))
         return
     t0 = time.perf_counter()
     # shard-sweep data is written by tools/ci_check.py to BENCH_fabric_shard.json

@@ -56,14 +56,27 @@ See ``docs/fabric.md`` for the full architecture guide.
 """
 
 from repro.fabric.execute import execute_linear, execute_matmul
+from repro.fabric.graph import (
+    GraphProgram,
+    compile_graph_forward,
+    graph_eligibility,
+    per_node_forward,
+    shard_forward_graph,
+    transformer_graph_weights,
+)
 from repro.fabric.mapper import (
+    ForwardGraph,
+    GraphNode,
     LayerPlacement,
+    TileAssignment,
     map_matmul,
     map_model,
     model_forward_chain,
+    model_forward_graph,
     model_matmuls,
 )
 from repro.fabric.pipeline import (
+    conversion_cycles,
     fabric_throughput,
     iso_area_comparison,
     link_validation,
@@ -78,7 +91,12 @@ from repro.fabric.program import (
     per_layer_forward,
     program_eligibility,
 )
-from repro.fabric.report import fabric_report, render_markdown, sharded_fabric_report
+from repro.fabric.report import (
+    fabric_report,
+    graph_section,
+    render_markdown,
+    sharded_fabric_report,
+)
 from repro.fabric.shard import (
     ShardedPlacement,
     execute_sharded_matmul,
@@ -87,17 +105,30 @@ from repro.fabric.shard import (
     shard_placement,
 )
 from repro.fabric.tiles import analytic_cim_stats, column_tile_matmul
-from repro.fabric.topology import ChipMeshConfig, FabricConfig, arrays_for_area
+from repro.fabric.topology import (
+    BITCELL_UM2_65NM,
+    MODES,
+    ChipMeshConfig,
+    FabricConfig,
+    arrays_for_area,
+)
 
 __all__ = [
     "FabricConfig",
     "ChipMeshConfig",
+    "MODES",
+    "BITCELL_UM2_65NM",
     "arrays_for_area",
+    "TileAssignment",
     "LayerPlacement",
     "map_matmul",
     "map_model",
     "model_matmuls",
     "model_forward_chain",
+    "GraphNode",
+    "ForwardGraph",
+    "model_forward_graph",
+    "conversion_cycles",
     "fabric_throughput",
     "iso_area_comparison",
     "overlap_rounds",
@@ -118,7 +149,14 @@ __all__ = [
     "per_layer_forward",
     "measure_forward",
     "program_eligibility",
+    "GraphProgram",
+    "compile_graph_forward",
+    "per_node_forward",
+    "graph_eligibility",
+    "shard_forward_graph",
+    "transformer_graph_weights",
     "fabric_report",
     "sharded_fabric_report",
+    "graph_section",
     "render_markdown",
 ]

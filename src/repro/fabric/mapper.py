@@ -35,6 +35,9 @@ __all__ = [
     "map_model",
     "model_matmuls",
     "model_forward_chain",
+    "GraphNode",
+    "ForwardGraph",
+    "model_forward_graph",
 ]
 
 
@@ -301,6 +304,227 @@ def model_forward_chain(
             chain.append((name, m, k, n))
             cur = n
     return chain
+
+
+# ---------------------------------------------------------------------------
+# Forward graph: the complete block, siblings and mixing ops included
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphNode:
+    """One node of a :class:`ForwardGraph`.
+
+    ``op`` is one of:
+
+    * ``"matmul"`` — a CiM-mapped linear ``(M, k) @ (k, n)``. ``combine``
+      says how the mesh's model axis recombines the K-slice partials:
+      ``"scatter"`` (tiled reduce-scatter, output stays feature-sharded) or
+      ``"psum"`` (full replicated output — only the tiny MoE router, whose
+      output feeds a softmax over the whole expert axis).
+    * ``"norm"`` — RMS norm over the ``d``-wide feature axis (``eps``).
+    * ``"attention"`` — RoPE-free causal GQA mixing ``softmax(q kᵀ) v``
+      (``n_heads`` / ``n_kv_heads`` / ``head_dim``); inputs are (q, k, v).
+    * ``"silu_gate"`` — ``silu(gate) * up``; inputs are (gate, up).
+    * ``"residual"`` — elementwise add of its two inputs.
+    * ``"moe_gate"`` — scale the expert output by the router's softmax
+      probability of the one activated expert; inputs are (expert, router).
+
+    ``inputs`` are producer-node names; the literal name ``"x"`` is the
+    graph input (the embedded residual stream).
+    """
+
+    name: str
+    op: str
+    inputs: Tuple[str, ...]
+    k: int = 0  # matmul: reduction width
+    n: int = 0  # matmul: output width
+    combine: str = "scatter"  # matmul: "scatter" | "psum"
+    n_heads: int = 0  # attention
+    n_kv_heads: int = 0  # attention
+    head_dim: int = 0  # attention
+    d: int = 0  # norm: feature width
+    eps: float = 1e-5  # norm
+
+
+@dataclasses.dataclass(frozen=True)
+class ForwardGraph:
+    """A complete forward pass as a node list in execution order.
+
+    Unlike :func:`model_forward_chain` — which keeps only the residual-path
+    linears and silently drops the k/v/up/router siblings plus all mixing
+    ops — a graph holds EVERY matmul of the pass (sibling branches share
+    their producer's input) and the non-CiM ops between them, so both the
+    cost rollups and the fused executor see the model the fabric would
+    actually serve.
+
+    Example::
+
+        >>> from repro.configs.registry import get_config
+        >>> from repro.fabric import model_forward_graph
+        >>> g = model_forward_graph(get_config("smollm-135m"), 4, block_only=True)
+        >>> [nd.name for nd in g.matmul_nodes][:3]
+        ['block.q_proj', 'block.k_proj', 'block.v_proj']
+        >>> sorted({nd.op for nd in g.nodes})
+        ['attention', 'matmul', 'norm', 'residual', 'silu_gate']
+    """
+
+    nodes: Tuple[GraphNode, ...]
+    m: int  # tokens per pass — the M of every matmul node
+    d_in: int  # graph-input feature width (d_model)
+    output: str  # name of the node producing the graph output
+
+    @property
+    def matmul_nodes(self) -> Tuple[GraphNode, ...]:
+        return tuple(nd for nd in self.nodes if nd.op == "matmul")
+
+    def matmuls(self) -> List[Tuple[str, int, int, int]]:
+        """The ``(name, M, K, N)`` list of every CiM linear, in node order —
+        feeds ``shard_model(matmuls=...)`` exactly like ``model_matmuls``."""
+        return [(nd.name, self.m, nd.k, nd.n) for nd in self.matmul_nodes]
+
+    def node(self, name: str) -> GraphNode:
+        for nd in self.nodes:
+            if nd.name == name:
+                return nd
+        raise KeyError(name)
+
+    def weighted_nodes(self) -> Tuple[GraphNode, ...]:
+        """Nodes that carry a parameter: matmuls (a ``(k, n)`` weight) and
+        norms (a ``(d,)`` scale vector) — the keys of a graph weight dict."""
+        return tuple(nd for nd in self.nodes if nd.op in ("matmul", "norm"))
+
+    def sibling_names(self) -> List[str]:
+        """Matmul nodes that branch off a shared input instead of continuing
+        the residual chain — exactly the placements ``model_forward_chain``
+        drops (the chain-vs-graph cost delta of the report regression test)."""
+        chain_suffixes = ("k_proj", "v_proj", "up_proj", "router")
+        return [
+            nd.name for nd in self.matmul_nodes
+            if nd.name.split(".")[-1] in chain_suffixes
+        ]
+
+    def collective_budget(self, model_axis: int) -> dict:
+        """The documented collective census of the fused graph program on a
+        ``model_axis``-wide mesh (``GraphProgram.collective_counts`` must
+        equal this — scatters are enumerated per sibling, never silently
+        added):
+
+        * one tiled ``reduce_scatter`` per scatter-combined matmul (siblings
+          included: a dense block pays 7 — q/k/v/o/gate/up/down — where the
+          chain paid 4);
+        * ONE trailing ``all_gather``;
+        * one ``pmax`` per re-quantization boundary = per *distinct* matmul
+          input (siblings share their producer's quantization, so q/k/v and
+          gate/up cost one boundary each);
+        * one ``psum`` per norm (sum of squares over the sharded feature
+          axis), per psum-combined router, plus 2 for the stats totals.
+
+        On a 1x1-model mesh the scatters/gather vanish (nothing is sharded)
+        and the boundary pmaxes/psums remain as counted no-ops.
+        """
+        scatter = sum(1 for nd in self.matmul_nodes if nd.combine == "scatter")
+        psum_mm = sum(1 for nd in self.matmul_nodes if nd.combine == "psum")
+        norms = sum(1 for nd in self.nodes if nd.op == "norm")
+        boundaries = len({nd.inputs[0] for nd in self.matmul_nodes})
+        many = model_axis > 1
+        return {
+            "reduce_scatter": scatter if many else 0,
+            "all_gather": 1 if many else 0,
+            "pmax": boundaries,
+            "psum": norms + psum_mm + 2,
+            "ppermute": 0,
+            "all_to_all": 0,
+        }
+
+
+def model_forward_graph(
+    cfg: ModelConfig, tokens: int, block_only: bool = False
+) -> ForwardGraph:
+    """The COMPLETE forward pass of ``cfg`` as a :class:`ForwardGraph`.
+
+    Supersedes :func:`model_forward_chain` as the fused-program workload:
+    sibling projections (k/v/up/router) are emitted as branch outputs of the
+    shared layer input instead of skipped, and the non-CiM ops between the
+    linears — pre-norms, RoPE-free causal attention mixing, SiLU gating,
+    residual adds, the final norm — become explicit nodes. MoE blocks route
+    through ONE activated expert (``expert0``) scaled by the router's
+    softmax probability; Mamba/hybrid families have no matmul-graph forward
+    and raise.
+
+    ``block_only`` emits a single ``block``-prefixed attention+MLP block
+    (no final norm / unembed), mirroring ``model_matmuls(block_only=True)``.
+
+    Example::
+
+        >>> from repro.configs.registry import get_config
+        >>> from repro.fabric import model_forward_graph
+        >>> g = model_forward_graph(get_config("smollm-135m"), 4)
+        >>> len(g.matmul_nodes), g.output
+        (211, 'unembed')
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"model_forward_graph supports dense|moe families; {cfg.family!r} "
+            "has no pure matmul-graph forward (use model_matmuls for costs)"
+        )
+    d = cfg.d_model
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    nodes: List[GraphNode] = []
+
+    def norm(name: str, src: str) -> str:
+        nodes.append(GraphNode(name, "norm", (src,), d=d, eps=cfg.norm_eps))
+        return name
+
+    def mm(name: str, src: str, k: int, n: int, combine: str = "scatter") -> str:
+        nodes.append(GraphNode(name, "matmul", (src,), k=k, n=n, combine=combine))
+        return name
+
+    def attn_block(p: str, resid: str) -> str:
+        ln = norm(f"{p}.ln1", resid)
+        q = mm(f"{p}.q_proj", ln, d, h * hd)
+        kk = mm(f"{p}.k_proj", ln, d, kv * hd)
+        vv = mm(f"{p}.v_proj", ln, d, kv * hd)
+        nodes.append(
+            GraphNode(f"{p}.attn_mix", "attention", (q, kk, vv),
+                      n_heads=h, n_kv_heads=kv, head_dim=hd)
+        )
+        o = mm(f"{p}.o_proj", f"{p}.attn_mix", h * hd, d)
+        nodes.append(GraphNode(f"{p}.attn_res", "residual", (resid, o)))
+        return f"{p}.attn_res"
+
+    def swiglu(ln: str, mm_prefix: str, d_ff: int) -> str:
+        gate = mm(f"{mm_prefix}.gate_proj", ln, d, d_ff)
+        up = mm(f"{mm_prefix}.up_proj", ln, d, d_ff)
+        nodes.append(GraphNode(f"{mm_prefix}.silu", "silu_gate", (gate, up)))
+        return mm(f"{mm_prefix}.down_proj", f"{mm_prefix}.silu", d_ff, d)
+
+    def dense_mlp(p: str, resid: str) -> str:
+        ln = norm(f"{p}.ln2", resid)
+        down = swiglu(ln, p, cfg.d_ff or d * 4)
+        nodes.append(GraphNode(f"{p}.mlp_res", "residual", (resid, down)))
+        return f"{p}.mlp_res"
+
+    def moe_mlp(p: str, resid: str) -> str:
+        # ln2 is shared by the router and the activated expert; the router's
+        # softmax needs the whole expert axis, so it recombines via psum
+        ln = norm(f"{p}.ln2", resid)
+        router = mm(f"{p}.router", ln, d, cfg.n_experts, combine="psum")
+        down = swiglu(ln, f"{p}.expert0", cfg.d_ff_expert)
+        nodes.append(GraphNode(f"{p}.moe_gate", "moe_gate", (down, router)))
+        nodes.append(GraphNode(f"{p}.mlp_res", "residual", (resid, f"{p}.moe_gate")))
+        return f"{p}.mlp_res"
+
+    resid = "x"
+    n_blocks = 1 if block_only else cfg.n_layers
+    for i in range(n_blocks):
+        p = "block" if block_only else f"layer{i}"
+        resid = attn_block(p, resid)
+        resid = moe_mlp(p, resid) if cfg.family == "moe" else dense_mlp(p, resid)
+    if not block_only:
+        resid = norm("ln_f", resid)
+        resid = mm("unembed", resid, d, cfg.padded_vocab)
+    return ForwardGraph(nodes=tuple(nodes), m=tokens, d_in=d, output=resid)
 
 
 def map_model(

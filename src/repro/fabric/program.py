@@ -67,6 +67,27 @@ __all__ = [
 _COLLECTIVE_PRIMS = ("all_gather", "reduce_scatter", "psum", "pmax", "ppermute", "all_to_all")
 
 
+def _count_collectives(fn, args) -> dict:
+    """Count collective primitives in ``fn``'s jaxpr (recursing into nested
+    jaxprs) — shared by the chain program's and the graph program's
+    collective census."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    counts = {name: 0 for name in _COLLECTIVE_PRIMS}
+
+    def walk(j):
+        for eqn in j.eqns:
+            if eqn.primitive.name in counts:
+                counts[eqn.primitive.name] += 1
+            for v in eqn.params.values():
+                for item in v if isinstance(v, (list, tuple)) else [v]:
+                    inner = getattr(item, "jaxpr", item)
+                    if hasattr(inner, "eqns"):
+                        walk(inner)
+
+    walk(jaxpr.jaxpr)
+    return counts
+
+
 def shard_forward_chain(
     cfg: ModelConfig,
     chip_mesh: ChipMeshConfig,
@@ -205,6 +226,19 @@ class FabricProgram:
             for i, (k, n) in enumerate(self.weight_shapes)
         ]
 
+    def example_input(self, key: jax.Array) -> jnp.ndarray:
+        """An ``(M, K0)`` input matching the planned chain shapes."""
+        return jax.random.normal(key, (self.m, self.placements[0].k))
+
+    def reference_forward(self, x, weights, key=None, backend: str = "sequential",
+                          return_stats: bool = False):
+        """The per-layer ``execute_sharded_matmul`` loop on this program's
+        placements — what ``measure_forward`` times as the unfused baseline."""
+        return per_layer_forward(
+            x, weights, self.placements, self.chip_mesh, self.cim,
+            key=key, backend=backend, return_stats=return_stats,
+        )
+
     # -- fused SPMD program -------------------------------------------------
 
     def _fused(self, has_key: bool, collectives: bool = True):
@@ -321,6 +355,20 @@ class FabricProgram:
             flat.append(key)
         return batch_shape, xm, flat
 
+    def _fused_args(self, x, weights, key):
+        """The fused callable's concrete argument tuple (measure_forward)."""
+        _, xm, flat = self._prepare(x, weights, key)
+        return (xm, *flat)
+
+    def fused_available(self, x) -> bool:
+        """Whether the fused shard_map path can run THIS input — the
+        resolved backend plus ``__call__``'s ragged-batch condition
+        (flattened rows divisible by the data axis), exposed so
+        ``measure_forward`` never traces an infeasible shape."""
+        if self.backend != "shard_map":
+            return False
+        return x.reshape(-1, x.shape[-1]).shape[0] % self.chip_mesh.data == 0
+
     def __call__(self, x, weights, key: Optional[jax.Array] = None, return_stats: bool = False):
         if self.backend != "shard_map":
             return per_layer_forward(
@@ -358,21 +406,7 @@ class FabricProgram:
         if weights is None:
             weights = [jnp.zeros(s) for s in self.weight_shapes]
         _, xm, flat = self._prepare(x, weights, key)
-        jaxpr = jax.make_jaxpr(self._fused(key is not None))(xm, *flat)
-        counts = {name: 0 for name in _COLLECTIVE_PRIMS}
-
-        def walk(j):
-            for eqn in j.eqns:
-                if eqn.primitive.name in counts:
-                    counts[eqn.primitive.name] += 1
-                for v in eqn.params.values():
-                    for item in v if isinstance(v, (list, tuple)) else [v]:
-                        inner = getattr(item, "jaxpr", item)
-                        if hasattr(inner, "eqns"):
-                            walk(inner)
-
-        walk(jaxpr.jaxpr)
-        return counts
+        return _count_collectives(self._fused(key is not None), (xm, *flat))
 
 
 def compile_forward(
@@ -510,7 +544,7 @@ def _time_best(fn, iters: int) -> float:
 
 
 def measure_forward(
-    program: FabricProgram,
+    program,
     x=None,
     weights=None,
     key: Optional[jax.Array] = None,
@@ -518,12 +552,15 @@ def measure_forward(
     per_layer_backend: Optional[str] = None,
     per_layer_iters: int = 1,
 ) -> dict:
-    """Wall-clock the fused program and isolate its collectives' time.
+    """Wall-clock a fused program and isolate its collectives' time.
 
+    ``program`` is a chain :class:`FabricProgram` or a full-block
+    :class:`~repro.fabric.graph.GraphProgram` — both expose the fused /
+    collective-stripped twins and a ``reference_forward`` unfused baseline.
     Runs (block-until-ready, best of ``iters`` after a warmup): the fused
     program; an identical program with the collectives replaced by local
     stand-ins of the same shapes (so the difference is the collectives'
-    wall time); and the per-layer ``execute_sharded_matmul`` loop (the
+    wall time); and the per-layer/per-node reference loop (the
     gather-per-layer baseline the fusion removes — ``per_layer_backend``
     defaults to the program's own backend, and its dispatch/trace overhead
     per call is real steady-state cost, so it is timed with
@@ -541,7 +578,7 @@ def measure_forward(
     from repro.fabric.pipeline import link_validation
 
     if x is None:
-        x = jax.random.normal(jax.random.PRNGKey(0), (program.m, program.placements[0].k))
+        x = program.example_input(jax.random.PRNGKey(0))
     if weights is None:
         weights = program.random_weights(jax.random.PRNGKey(1))
 
@@ -552,22 +589,23 @@ def measure_forward(
         "n_chips": program.chip_mesh.n_chips,
     }
     measured_collective_s = None
-    if program.backend == "shard_map":
-        _, xm, flat = program._prepare(x, weights, key)
+    # fused_available also screens ragged batches (__call__'s documented
+    # fallback), which the fused twins cannot trace
+    if program.backend == "shard_map" and program.fused_available(x):
+        args = program._fused_args(x, weights, key)
         fused = program._fused(key is not None)
         local = program._fused(key is not None, collectives=False)
-        jax.block_until_ready(fused(xm, *flat))  # compile + warm
-        jax.block_until_ready(local(xm, *flat))
-        out["fused_s"] = _time_best(lambda: fused(xm, *flat), iters)
-        out["local_s"] = _time_best(lambda: local(xm, *flat), iters)
+        jax.block_until_ready(fused(*args))  # compile + warm
+        jax.block_until_ready(local(*args))
+        out["fused_s"] = _time_best(lambda: fused(*args), iters)
+        out["local_s"] = _time_best(lambda: local(*args), iters)
         measured_collective_s = max(0.0, out["fused_s"] - out["local_s"])
     loop_backend = per_layer_backend or program.backend
     out["per_layer_backend"] = loop_backend
-    per_layer = lambda: per_layer_forward(  # noqa: E731 — timed thunk
-        x, weights, program.placements, program.chip_mesh, program.cim,
-        key=key, backend=loop_backend,
+    per_layer = lambda: program.reference_forward(  # noqa: E731 — timed thunk
+        x, weights, key=key, backend=loop_backend
     )
-    jax.block_until_ready(per_layer())  # warm the per-layer caches too
+    jax.block_until_ready(per_layer())  # warm the reference caches too
     out["per_layer_s"] = _time_best(per_layer, per_layer_iters)
     if "fused_s" in out:
         out["fused_speedup_vs_per_layer"] = out["per_layer_s"] / max(out["fused_s"], 1e-12)

@@ -32,7 +32,34 @@ from repro.fabric.pipeline import (
 )
 from repro.fabric.topology import EMA_PJ_PER_BIT, ChipMeshConfig, FabricConfig
 
-__all__ = ["fabric_report", "sharded_fabric_report", "render_markdown"]
+__all__ = ["fabric_report", "sharded_fabric_report", "graph_section", "render_markdown"]
+
+
+def graph_section(graph, model_axis: int) -> dict:
+    """The report's ``graph`` section for a ``ForwardGraph``: node-op
+    census, the sibling branches the chain rollup undercounted, and the
+    documented collective budget. ONE schema, shared by
+    ``sharded_fabric_report(..., graph=...)`` and the serve rollup.
+
+    Example::
+
+        >>> from repro.configs.registry import get_config
+        >>> from repro.fabric import graph_section, model_forward_graph
+        >>> g = model_forward_graph(get_config("smollm-135m"), 4, block_only=True)
+        >>> sec = graph_section(g, 2)
+        >>> sec["n_matmuls"], sec["collective_budget"]["all_gather"]
+        (7, 1)
+    """
+    ops: dict = {}
+    for nd in graph.nodes:
+        ops[nd.op] = ops.get(nd.op, 0) + 1
+    return {
+        "n_nodes": len(graph.nodes),
+        "ops": ops,
+        "n_matmuls": len(graph.matmul_nodes),
+        "siblings": graph.sibling_names(),
+        "collective_budget": graph.collective_budget(model_axis),
+    }
 
 
 def _layer_row(
@@ -136,6 +163,7 @@ def sharded_fabric_report(
     chip_mesh: ChipMeshConfig,
     n_conversions: int = 96,
     measured: Optional[dict] = None,
+    graph=None,
 ) -> dict:
     """Mesh-level rollup of :class:`~repro.fabric.shard.ShardedPlacement`s.
 
@@ -151,6 +179,13 @@ def sharded_fabric_report(
     ``measured`` (a ``fabric.program.measure_forward`` dict) attaches the
     fused program's measured-vs-modeled link-latency validation as a
     ``program_validation`` section, rendered next to the overlap totals.
+
+    ``graph`` (a ``fabric.mapper.ForwardGraph`` whose matmul nodes produced
+    ``sharded``) attaches a ``graph`` section — node taxonomy, the sibling
+    branches the old chain rollup undercounted, and the documented
+    collective budget. Passing the graph's placements here is what makes
+    the totals include the k/v/up/router siblings' conversions, EMA, and
+    link traffic.
 
     Example::
 
@@ -234,6 +269,8 @@ def sharded_fabric_report(
     }
     if measured is not None:
         report["program_validation"] = measured
+    if graph is not None:
+        report["graph"] = graph_section(graph, chip_mesh.model)
     return report
 
 
@@ -320,6 +357,21 @@ def render_markdown(report: dict, max_layers: Optional[int] = 24) -> str:
             else ""
         ),
     ]
+    if "graph" in report:
+        g = report["graph"]
+        ops = ", ".join(f"{v} {k}" for k, v in sorted(g["ops"].items()))
+        budget = g["collective_budget"]
+        kinds = sorted({s.split(".")[-1] for s in g["siblings"]})
+        out += [
+            "",
+            f"**forward graph:** {g['n_nodes']} nodes ({ops}); "
+            f"{len(g['siblings'])} sibling branch(es)"
+            + (f" ({'/'.join(kinds)})" if kinds else "")
+            + " costed — the chain rollup skipped them; collective budget "
+            f"{budget['reduce_scatter']} reduce-scatter + "
+            f"{budget['all_gather']} all-gather, {budget['pmax']} "
+            f"re-quantization boundaries",
+        ]
     if "program_validation" in report:
         pv = report["program_validation"]
         ratio = pv.get("measured_over_modeled")

@@ -1,8 +1,9 @@
 """The shared per-(column-tile, K-shard) inner loop of every fabric executor.
 
 ``fabric.execute`` (single chip), ``fabric.shard`` (both the sequential chip
-loop and the shard_map SPMD program), and ``fabric.program`` (the whole-model
-fused forward) all execute the same physical operation per chip: walk the
+loop and the shard_map SPMD program), ``fabric.program`` (the whole-model
+fused chain forward), and ``fabric.graph`` (the full-transformer-block fused
+graph) all execute the same physical operation per chip: walk the
 output-column tiles of a quantized ``(M, K) @ (K, N)`` block, run each tile
 through ``core.cim_linear``'s per-plane machinery with a per-tile
 ``fold_in(key, nt)`` noise key, and accumulate conversion/comparison stats.

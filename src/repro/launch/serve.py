@@ -276,31 +276,51 @@ def main():
         )
 
         if args.fabric_program:
-            # whole-model fused forward (one block chain) as the validation
-            # pass: numeric check vs the per-layer loop plus the
-            # measured-vs-modeled link-latency table (repro.fabric.program)
+            # fused forward as the validation pass: the full-transformer-
+            # block GRAPH (siblings, attention mixing, norms, residuals —
+            # repro.fabric.graph) for families with a matmul-graph forward,
+            # the residual-CHAIN program (repro.fabric.program) for the
+            # rest (mamba/hybrid). Either way the fused path falls back to
+            # its reference loop (with printed reasons) when the served
+            # model's shapes are not eligible on this mesh.
             import numpy as _np
 
-            from repro.fabric import compile_forward, measure_forward, per_layer_forward
+            from repro.fabric import measure_forward
 
             val_cim = _CiM(
                 mode="bitplane", a_bits=4, w_bits=4, adc_bits=fb.adc_bits,
                 rows=fb.rows, ste=False,
             )
-            prog = compile_forward(
-                cfg, cm, cim=val_cim, backend=args.fabric_backend,
-                tokens=st.batch, block_only=True,
-            )
-            xp = _jax.random.normal(
-                _jax.random.PRNGKey(2), (prog.m, prog.placements[0].k)
-            )
+            if cfg.family in ("dense", "moe"):
+                from repro.fabric import compile_graph_forward
+                from repro.fabric.report import graph_section
+
+                prog = compile_graph_forward(
+                    cfg, cm, cim=val_cim, backend=args.fabric_backend,
+                    tokens=st.batch, block_only=True,
+                )
+                xp = _jax.random.normal(
+                    _jax.random.PRNGKey(2), (st.batch, 1, prog.d_in)
+                )
+                rollup["graph"] = graph_section(prog.graph, cm.model)
+                desc = (f"graph: {len(prog.graph.nodes)}-node block "
+                        f"({len(prog.placements)} matmuls)")
+                ref_name = "per-node loop"
+            else:
+                from repro.fabric import compile_forward
+
+                prog = compile_forward(
+                    cfg, cm, cim=val_cim, backend=args.fabric_backend,
+                    tokens=st.batch, block_only=True,
+                )
+                xp = prog.example_input(_jax.random.PRNGKey(2))
+                desc = f"chain: {prog.n_layers}-layer block"
+                ref_name = "per-layer loop"
             wsp = prog.random_weights(_jax.random.PRNGKey(3))
             y_f = prog(xp, wsp)
-            y_l = per_layer_forward(
-                xp, wsp, prog.placements, cm, val_cim, backend="sequential"
-            )
+            y_l = prog.reference_forward(xp, wsp, backend="sequential")
             maxdiff = float(_np.abs(_np.asarray(y_f) - _np.asarray(y_l)).max())
-            # per-layer baseline on the sequential loop: the auto-fallback
+            # reference baseline on the sequential loop: the auto-fallback
             # path, and cheap enough to keep serving startup interactive
             measured = measure_forward(
                 prog, x=xp, weights=wsp, iters=1,
@@ -310,10 +330,9 @@ def main():
             rollup["program_validation"] = measured
             mc = measured.get("measured_collective_s")
             print(
-                f"[serve] fused program: {prog.n_layers}-layer block chain on "
-                f"{prog.backend}"
+                f"[serve] fused {desc} on {prog.backend}"
                 + (f" (fallback: {'; '.join(prog.problems)})" if prog.problems else "")
-                + f", maxdiff {maxdiff:.2e} vs per-layer loop; collectives "
+                + f", maxdiff {maxdiff:.2e} vs {ref_name}; collectives "
                 + (f"{mc*1e3:.3g} ms wall" if mc is not None else "n/a")
                 + f" vs modeled link {measured['modeled_link_s']*1e3:.3g} ms"
             )

@@ -281,3 +281,35 @@ def test_fabric_report_conventional_has_no_ratios():
     p = [map_matmul("l", 1, 32, 32, fb)]
     rep = fabric_report(p, fb)
     assert "paper_ratios" not in rep and "iso_area" not in rep
+
+
+def test_model_forward_graph_is_well_formed():
+    """Every graph node consumes already-produced values with matching
+    feature widths — the dataflow invariant the fused executor relies on."""
+    from repro.fabric import model_forward_graph
+
+    for arch in ("smollm-135m", "qwen3-moe-30b-a3b"):
+        g = model_forward_graph(get_config(arch), 4, block_only=True)
+        widths = {"x": g.d_in}
+        for nd in g.nodes:
+            assert all(i in widths for i in nd.inputs), nd.name
+            if nd.op == "matmul":
+                assert widths[nd.inputs[0]] == nd.k, nd.name
+                widths[nd.name] = nd.n
+            elif nd.op == "attention":
+                q, k, v = nd.inputs
+                assert widths[q] == nd.n_heads * nd.head_dim
+                assert widths[k] == widths[v] == nd.n_kv_heads * nd.head_dim
+                widths[nd.name] = nd.n_heads * nd.head_dim
+            elif nd.op == "norm":
+                assert widths[nd.inputs[0]] == nd.d
+                widths[nd.name] = nd.d
+            elif nd.op in ("silu_gate", "residual"):
+                a, b = (widths[i] for i in nd.inputs)
+                assert a == b, nd.name
+                widths[nd.name] = a
+            elif nd.op == "moe_gate":
+                widths[nd.name] = widths[nd.inputs[0]]
+            else:
+                raise AssertionError(f"unknown op {nd.op}")
+        assert g.output in widths

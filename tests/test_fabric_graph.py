@@ -1,0 +1,371 @@
+"""Full-transformer-block fused graph (``repro.fabric.graph`` +
+``mapper.model_forward_graph``): node taxonomy, sibling-inclusive cost
+rollups (the chain undercount regression), real-``init_transformer``-weight
+bit-exactness of the fused program vs the per-node reference on 1x1 (noisy
+ADC included), multi-chip agreement, the collective census vs the documented
+budget, ragged-batch fallback, and per-node noise-key independence.
+``tests/conftest.py`` forces 8 host devices."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config
+from repro.core.cim_linear import CiMConfig
+from repro.fabric import (
+    ChipMeshConfig,
+    FabricConfig,
+    compile_graph_forward,
+    execute_sharded_matmul,
+    graph_eligibility,
+    measure_forward,
+    model_forward_chain,
+    model_forward_graph,
+    model_matmuls,
+    per_node_forward,
+    render_markdown,
+    shard_forward_graph,
+    shard_model,
+    sharded_fabric_report,
+    transformer_graph_weights,
+)
+from repro.models.transformer import init_transformer
+
+FB = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+CIM_BP = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+NOISY = dataclasses.replace(CIM_BP, comparator_sigma=0.05)
+
+# graph-eligible on a 2x2 mesh: every K tile-aligns (64/128 % (2*16) == 0)
+# and q/kv heads (4/2) divide the model axis
+CFG = ModelConfig(
+    name="graph-test", family="dense", n_layers=2, d_model=64, vocab=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, pad_vocab_multiple=16,
+    param_dtype="float32", compute_dtype="float32",
+)
+MOE = ModelConfig(
+    name="graph-moe", family="moe", n_layers=1, d_model=64, vocab=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, n_experts=8, top_k=2,
+    d_ff_expert=64, pad_vocab_multiple=16,
+    param_dtype="float32", compute_dtype="float32",
+)
+
+
+@pytest.fixture(scope="module")
+def real_weights():
+    params = init_transformer(jax.random.PRNGKey(0), CFG)
+    return transformer_graph_weights(params, CFG)
+
+
+# ---------------------------------------------------------------------------
+# graph extraction / taxonomy
+# ---------------------------------------------------------------------------
+
+
+def test_dense_block_graph_taxonomy():
+    g = model_forward_graph(get_config("smollm-135m"), 4, block_only=True)
+    assert [nd.name for nd in g.nodes] == [
+        "block.ln1", "block.q_proj", "block.k_proj", "block.v_proj",
+        "block.attn_mix", "block.o_proj", "block.attn_res", "block.ln2",
+        "block.gate_proj", "block.up_proj", "block.silu", "block.down_proj",
+        "block.mlp_res",
+    ]
+    assert g.output == "block.mlp_res"
+    assert g.sibling_names() == ["block.k_proj", "block.v_proj", "block.up_proj"]
+    # every matmul the graph emits is one of model_matmuls' linears, with
+    # identical shapes — the graph never invents or resizes a matmul
+    mm = {(n, m, k, nn) for n, m, k, nn in model_matmuls(
+        get_config("smollm-135m"), 4, block_only=True)}
+    assert set(g.matmuls()) == mm
+
+
+def test_full_model_graph_ends_at_unembed_and_supersets_chain():
+    cfg = get_config("smollm-135m")
+    g = model_forward_graph(cfg, 2)
+    assert g.output == "unembed"
+    assert len(g.matmul_nodes) == 7 * cfg.n_layers + 1
+    chain = {n for n, *_ in model_forward_chain(cfg, 2)}
+    graph_names = {nd.name for nd in g.matmul_nodes}
+    assert chain < graph_names  # strict superset: the siblings are back
+
+
+def test_moe_graph_routes_one_expert():
+    g = model_forward_graph(MOE, 2, block_only=True)
+    names = [nd.name for nd in g.nodes]
+    assert "block.router" in names and "block.moe_gate" in names
+    assert "block.expert1.gate_proj" not in names  # ONE activated expert
+    router = g.node("block.router")
+    assert router.combine == "psum"  # softmax needs the whole expert axis
+    assert all(nd.combine == "scatter" for nd in g.matmul_nodes
+               if nd is not router)
+
+
+def test_graph_rejects_non_matmul_families():
+    with pytest.raises(ValueError, match="dense|moe"):
+        model_forward_graph(get_config("mamba2-130m"), 2)
+
+
+def test_collective_budget_shape():
+    g = model_forward_graph(CFG, 8)
+    b2 = g.collective_budget(2)
+    # 7 scatters/block * 2 blocks + unembed; one trailing gather; 4
+    # boundaries/block + unembed; psum: 2 norms/block + ln_f + 2 stats
+    assert b2["reduce_scatter"] == 15 and b2["all_gather"] == 1
+    assert b2["pmax"] == 9 and b2["psum"] == 7
+    b1 = g.collective_budget(1)
+    assert b1["reduce_scatter"] == 0 and b1["all_gather"] == 0
+    assert b1["pmax"] == 9  # boundary pmaxes remain as counted no-ops
+
+
+# ---------------------------------------------------------------------------
+# satellite: the sibling undercount regression (chain vs graph rollup)
+# ---------------------------------------------------------------------------
+
+
+def test_graph_report_totals_exceed_chain_by_exactly_the_siblings():
+    """The chain-driven rollup omitted k/v/up conversions and link bits;
+    the graph rollup must exceed it by exactly the sibling placements'
+    stats (fabric large enough that both stay model-resident, so the EMA
+    delta is the siblings' activation streams + nothing residency-driven)."""
+    cfg = CFG
+    fb = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=256)
+    cm = ChipMeshConfig(data=2, model=2, fabric=fb)
+    graph, gsps = shard_forward_graph(cfg, cm, tokens=8, cim=CIM_BP)
+    csps = shard_model(cfg, cm, tokens=8, cim=CIM_BP,
+                       matmuls=model_forward_chain(cfg, 8))
+    grep = sharded_fabric_report(gsps, cm, graph=graph)
+    crep = sharded_fabric_report(csps, cm)
+    assert grep["totals"]["model_resident"] and crep["totals"]["model_resident"]
+    siblings = set(graph.sibling_names())
+    sib_rows = [r for r in grep["layers"] if r["layer"] in siblings]
+    assert len(sib_rows) == len(siblings) > 0
+    for key in ("conversions", "crosschip_bits_per_pass", "ema_bits_per_pass",
+                "weight_load_bits", "digitization_energy_pj"):
+        gt, ct = grep["totals"], crep["totals"]
+        tkey = {"weight_load_bits": "weight_program_bits"}.get(key, key)
+        delta = sum(r[key] for r in sib_rows)
+        assert gt[tkey] >= ct[tkey]
+        assert gt[tkey] - ct[tkey] == pytest.approx(delta), key
+    # the report carries the graph section with the documented budget
+    assert grep["graph"]["collective_budget"] == graph.collective_budget(2)
+    md = render_markdown(grep)
+    assert "forward graph" in md and "sibling branch(es)" in md
+
+
+# ---------------------------------------------------------------------------
+# eligibility
+# ---------------------------------------------------------------------------
+
+
+def test_graph_eligibility_head_divisibility():
+    # kv=1 head cannot split over model=2: mixing needs whole head groups
+    cfg = dataclasses.replace(CFG, n_kv_heads=1)
+    cm = ChipMeshConfig(model=2, fabric=FB)
+    graph, sps = shard_forward_graph(cfg, cm, tokens=8, cim=CIM_BP)
+    probs = graph_eligibility(graph, sps, cm)
+    assert any("head groups" in p for p in probs)
+    prog = compile_graph_forward(cfg, cm, CIM_BP, tokens=8)
+    assert prog.backend == "sequential" and prog.problems
+    with pytest.raises(ValueError, match="unavailable"):
+        compile_graph_forward(cfg, cm, CIM_BP, tokens=8, backend="shard_map")
+
+
+def test_compile_graph_forward_validates_cim_and_weights(real_weights):
+    cm = ChipMeshConfig(fabric=FB)
+    with pytest.raises(ValueError, match="ste=False"):
+        compile_graph_forward(CFG, cm, CiMConfig(mode="bitplane", rows=16, ste=True))
+    with pytest.raises(ValueError, match="bitplane|fake_quant"):
+        compile_graph_forward(CFG, cm, CiMConfig(mode="exact", ste=False))
+    prog = compile_graph_forward(CFG, cm, CIM_BP, tokens=8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 64))
+    ws = dict(real_weights)
+    missing = dict(ws)
+    missing.pop("layer0.k_proj")
+    with pytest.raises(ValueError, match="missing graph weights"):
+        prog(x, missing)
+    bad = dict(ws)
+    bad["layer0.q_proj"] = bad["layer0.q_proj"].T[:, :32]
+    with pytest.raises(ValueError, match="expects weights"):
+        prog(x, bad)
+    with pytest.raises(ValueError, match="batch, seq, d"):
+        prog(x.reshape(8, 64), ws)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: real weights, >= 2 blocks, bit-exact on 1x1, matches on 2x2,
+# census == budget
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cim,with_key", [(CIM_BP, False), (NOISY, True)])
+def test_fused_graph_1x1_bit_exact_real_weights(real_weights, cim, with_key):
+    """Acceptance: 2 transformer blocks of init_transformer weights through
+    the fused graph are bit-for-bit the per-node reference on a 1x1 mesh —
+    noisy ADC included (per-node fold_in keys shared by both paths)."""
+    cm = ChipMeshConfig(fabric=FB)
+    prog = compile_graph_forward(CFG, cm, cim, tokens=8)
+    assert prog.backend == "shard_map"  # auto fuses even on one chip
+    key = jax.random.PRNGKey(7) if with_key else None
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 64))
+    y = prog(x, real_weights, key=key)
+    y_ref = per_node_forward(
+        x, real_weights, prog.graph, prog.placements, cm, cim, key=key,
+        backend="sequential",
+    )
+    assert y.shape == (2, 4, CFG.padded_vocab)
+    assert (np.asarray(y) == np.asarray(y_ref)).all()
+
+
+def test_fused_graph_2x2_matches_and_census_equals_budget(real_weights):
+    """Acceptance: forced-device 2x2 mesh agreement (noisy ADC), identical
+    stats, and the collective census EQUAL to the documented budget — the
+    per-sibling scatters are enumerated, with ONE trailing all-gather."""
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    prog = compile_graph_forward(CFG, cm, NOISY, tokens=8)
+    assert prog.backend == "shard_map"
+    nk = jax.random.PRNGKey(9)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 64))
+    y, st = prog(x, real_weights, key=nk, return_stats=True)
+    y_ref, st_ref = prog.reference_forward(x, real_weights, key=nk,
+                                           return_stats=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-5)
+    assert int(st.conversions) == int(st_ref.conversions)
+    assert int(st.comparisons) == int(st_ref.comparisons)
+    counts = prog.collective_counts(key=nk)
+    assert counts == prog.collective_budget()
+    assert counts["all_gather"] == 1
+    assert counts["reduce_scatter"] == 7 * CFG.n_layers + 1
+
+
+def test_fused_graph_moe_and_fake_quant():
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    params = init_transformer(jax.random.PRNGKey(0), MOE)
+    ws = transformer_graph_weights(params, MOE)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 64))
+    prog = compile_graph_forward(MOE, cm, CIM_BP, tokens=8)
+    assert prog.backend == "shard_map"
+    y = np.asarray(prog(x, ws))
+    y_ref = np.asarray(prog.reference_forward(x, ws))
+    np.testing.assert_allclose(y, y_ref, atol=1e-5, rtol=1e-6)
+    assert prog.collective_counts() == prog.collective_budget()
+    fq = CiMConfig(mode="fake_quant", a_bits=8, w_bits=8, adc_bits=5, rows=16,
+                   ste=False)
+    params_d = init_transformer(jax.random.PRNGKey(0), CFG)
+    ws_d = transformer_graph_weights(params_d, CFG)
+    progf = compile_graph_forward(CFG, cm, fq, tokens=8)
+    yf = np.asarray(progf(x, ws_d))
+    yf_ref = np.asarray(progf.reference_forward(x, ws_d))
+    np.testing.assert_allclose(yf, yf_ref, atol=1e-5, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# satellite: ragged batch fallback + per-node noise-key independence
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_batch_falls_back_to_per_node_reference(real_weights):
+    """batch=3 does not divide data=2: auto falls back to the per-node loop
+    (bit-identical), an explicit shard_map request raises."""
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    prog = compile_graph_forward(CFG, cm, CIM_BP, tokens=8)
+    x3 = jax.random.normal(jax.random.PRNGKey(2), (3, 4, 64))
+    y3 = prog(x3, real_weights)
+    y3_ref = per_node_forward(
+        x3, real_weights, prog.graph, prog.placements, cm, CIM_BP,
+        backend="sequential",
+    )
+    assert (np.asarray(y3) == np.asarray(y3_ref)).all()
+    strict = compile_graph_forward(CFG, cm, CIM_BP, tokens=8, backend="shard_map")
+    with pytest.raises(ValueError, match="not divisible by the data axis"):
+        strict(x3, real_weights)
+
+
+def test_sibling_noise_keys_are_independent():
+    """k_proj and v_proj have identical shapes and (here) identical weights
+    and input; their ADC noise comes from fold_in(key, matmul_index) — node
+    2 vs node 3 — so their noisy outputs must differ (no shared draws),
+    while re-running either node's key reproduces its draws exactly."""
+    cm = ChipMeshConfig(fabric=FB)
+    graph, sps = shard_forward_graph(CFG, cm, tokens=8, cim=NOISY)
+    sp = {s.name: s for s in sps}
+    mm_names = [nd.name for nd in graph.matmul_nodes]
+    ik, iv = mm_names.index("layer0.k_proj"), mm_names.index("layer0.v_proj")
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    yk = execute_sharded_matmul(x, w, cm, NOISY, sharded=sp["layer0.k_proj"],
+                                key=jax.random.fold_in(key, ik))
+    yv = execute_sharded_matmul(x, w, cm, NOISY, sharded=sp["layer0.v_proj"],
+                                key=jax.random.fold_in(key, iv))
+    assert not (np.asarray(yk) == np.asarray(yv)).all()
+    yk2 = execute_sharded_matmul(x, w, cm, NOISY, sharded=sp["layer0.k_proj"],
+                                 key=jax.random.fold_in(key, ik))
+    assert (np.asarray(yk) == np.asarray(yk2)).all()
+
+
+# ---------------------------------------------------------------------------
+# weights adapter + measure_forward
+# ---------------------------------------------------------------------------
+
+
+def test_transformer_graph_weights_adapter():
+    params = init_transformer(jax.random.PRNGKey(0), CFG)
+    ws = transformer_graph_weights(params, CFG)
+    shapes = compile_graph_forward(CFG, ChipMeshConfig(fabric=FB), CIM_BP,
+                                   tokens=8).weight_shapes()
+    assert set(ws) == set(shapes)
+    for name, shape in shapes.items():
+        assert tuple(ws[name].shape) == shape, name
+        assert ws[name].dtype == jnp.float32
+    # block_only uses layer 0 under the block prefix, no unembed/ln_f
+    wb = transformer_graph_weights(params, CFG, block_only=True)
+    assert "unembed" not in wb and "block.q_proj" in wb
+    assert (np.asarray(wb["block.q_proj"]) == np.asarray(ws["layer0.q_proj"])).all()
+    # tied embeddings unembed via tok.T; qkv_bias is not mappable
+    tied = dataclasses.replace(CFG, tie_embeddings=True)
+    wt = transformer_graph_weights(init_transformer(jax.random.PRNGKey(0), tied), tied)
+    assert wt["unembed"].shape == (CFG.d_model, CFG.padded_vocab)
+    with pytest.raises(ValueError, match="qkv_bias"):
+        transformer_graph_weights(params, dataclasses.replace(CFG, qkv_bias=True))
+
+
+def test_measure_forward_on_graph_program(real_weights):
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    prog = compile_graph_forward(CFG, cm, CIM_BP, tokens=8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 64))
+    meas = measure_forward(prog, x=x, weights=real_weights, iters=1,
+                           per_layer_backend="sequential")
+    assert meas["backend"] == "shard_map" and meas["n_chips"] == 4
+    assert meas["fused_s"] > 0 and meas["per_layer_s"] > 0
+    assert meas["modeled_link_s"] > 0  # model axis carries sibling bits too
+    # a ragged batch cannot be traced by the fused twins: measure_forward
+    # must skip the fused timings (__call__'s documented fallback) instead
+    # of crashing inside shard_map
+    assert not prog.fused_available(jnp.zeros((3, 4, 64)))
+    meas3 = measure_forward(prog, x=x[:1], weights=real_weights, iters=1,
+                            per_layer_backend="sequential")
+    assert "fused_s" not in meas3 and meas3["per_layer_s"] > 0
+    assert meas3["measured_collective_s"] is None
+
+
+def test_serve_fabric_program_chain_fallback_for_mamba():
+    """serve --fabric-program on a family without a matmul-graph forward
+    (mamba/hybrid) validates via the fused CHAIN program — the graph path
+    raising for those families must not leak out of serving."""
+    mamba = get_config("mamba2-130m")
+    assert mamba.family == "mamba"
+    with pytest.raises(ValueError, match="dense|moe"):
+        model_forward_graph(mamba, 2, block_only=True)
+    from repro.fabric import compile_forward
+
+    cm = ChipMeshConfig(fabric=FB)
+    prog = compile_forward(mamba, cm, cim=CIM_BP, tokens=2, block_only=True)
+    x = prog.example_input(jax.random.PRNGKey(2))
+    ws = prog.random_weights(jax.random.PRNGKey(3))
+    y = prog(x, ws)
+    y_ref = prog.reference_forward(x, ws, backend="sequential")
+    assert (np.asarray(y) == np.asarray(y_ref)).all()

@@ -240,6 +240,20 @@ def test_fused_forward_has_at_most_one_all_gather():
     assert counts1["all_gather"] == 0 and counts1["reduce_scatter"] == 0
 
 
+def test_chain_program_reference_forward_and_example_input():
+    """The program-agnostic measure_forward API (PR 5): the chain program
+    exposes example_input/reference_forward like the graph program does."""
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    prog = compile_forward(chain(cm), cm, CIM_BP)
+    x = prog.example_input(jax.random.PRNGKey(0))
+    assert x.shape == (prog.m, prog.placements[0].k)
+    ws = prog.random_weights(jax.random.PRNGKey(1))
+    y = prog(x, ws)
+    y_ref = prog.reference_forward(x, ws, backend="sequential")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-5, rtol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # measured-vs-modeled link latency
 # ---------------------------------------------------------------------------

@@ -7,7 +7,12 @@ execution backend run under forced 8 host devices (subprocess; separate
 ``shard_map_smoke`` key), written to ``BENCH_fabric_shard.json`` — the
 fused whole-model forward smoke (``repro.fabric.program`` under forced 8
 host devices: bit-exact vs the per-layer loop, at most one all-gather,
-measured/modeled link-latency ratio -> ``BENCH_fabric_program.json``) — and
+measured/modeled link-latency ratio -> ``BENCH_fabric_program.json``) — the
+full-transformer-block fused GRAPH smoke (``repro.fabric.graph`` under
+forced 8 host devices: real ``init_transformer`` weights bit-exact vs the
+per-node reference on 1x1, collective census == documented budget ->
+``BENCH_fabric_graph.json``) — the public-api gate (every submodule
+``__all__`` symbol re-exported from ``repro.fabric.__all__``) — and
 the docs gate: ``README.md`` and
 ``docs/fabric.md`` must exist, every dotted ``repro.*`` reference in them
 must import, and every ``repro.fabric`` public symbol must be documented in
@@ -17,6 +22,7 @@ blows its time budget.
   python tools/ci_check.py [--skip-tests] [--out BENCH_fabric.json]
                            [--shard-out BENCH_fabric_shard.json]
                            [--program-out BENCH_fabric_program.json]
+                           [--graph-out BENCH_fabric_graph.json]
 """
 
 from __future__ import annotations
@@ -224,6 +230,82 @@ def run_program_smoke(out: Path) -> bool:
     return True
 
 
+def run_graph_smoke(out: Path) -> bool:
+    """Full-transformer-block fused GRAPH smoke (``repro.fabric.graph``)
+    under forced 8 host devices: real ``init_transformer`` weights through
+    the fused graph must be bit-exact vs the per-node reference on a 1x1
+    mesh (noisy ADC included), agree to float tolerance on the multi-chip
+    mesh, and the collective census must EQUAL the documented budget —
+    per-sibling scatters enumerated, one trailing all-gather. Recorded to
+    ``BENCH_fabric_graph.json`` for cross-PR tracking."""
+    t0 = time.perf_counter()
+    payload = _run_forced_device_smoke("--graph-smoke")
+    wall = time.perf_counter() - t0
+    payload["wall_s"] = wall
+    out.write_text(json.dumps(payload, indent=2, default=float))
+    if "error" in payload:
+        print(f"[ci_check] FAIL: fused graph smoke failed: {payload['error']}")
+        return False
+    print(
+        f"[ci_check] fused graph smoke: {payload['devices']} devices, mesh "
+        f"{payload['mesh']}, {payload.get('n_nodes')} nodes "
+        f"({payload.get('n_matmuls')} matmuls) in {wall:.1f}s -> {out}"
+    )
+    if wall > 2 * SMOKE_BUDGET_S:
+        print(f"[ci_check] FAIL: graph smoke took {wall:.1f}s > "
+              f"{2 * SMOKE_BUDGET_S}s budget")
+        return False
+    if not payload.get("bit_exact_1x1"):
+        print("[ci_check] FAIL: fused graph forward is not bit-exact vs the "
+              f"per-node reference on a 1x1 mesh: {payload}")
+        return False
+    if payload.get("max_abs_diff_vs_reference", 1.0) > 1e-4:
+        print("[ci_check] FAIL: fused graph forward diverges from the "
+              f"per-node reference: maxdiff {payload['max_abs_diff_vs_reference']}")
+        return False
+    if payload.get("backend") != "shard_map":
+        print(f"[ci_check] FAIL: fused graph did not resolve to shard_map "
+              f"under forced devices: {payload.get('backend')} "
+              f"({payload.get('problems')})")
+        return False
+    if not payload.get("budget_match"):
+        print(f"[ci_check] FAIL: graph collective census != documented budget: "
+              f"{payload.get('collectives')} vs {payload.get('collective_budget')}")
+        return False
+    gathers = payload.get("collectives", {}).get("all_gather")
+    if gathers is None or gathers > 1:
+        print(f"[ci_check] FAIL: fused graph should contain at most one "
+              f"all-gather, found {gathers}")
+        return False
+    return True
+
+
+def check_public_api() -> bool:
+    """Every symbol a ``repro.fabric`` submodule exports via ``__all__``
+    must be re-exported from ``repro.fabric.__all__`` — a new public symbol
+    that misses the package surface fails CI."""
+    sys.path.insert(0, str(REPO / "src"))
+    import repro.fabric as fabric
+
+    submodules = (
+        "execute", "graph", "mapper", "pipeline", "program", "report",
+        "shard", "tiles", "topology",
+    )
+    missing = []
+    for name in submodules:
+        mod = importlib.import_module(f"repro.fabric.{name}")
+        for sym in getattr(mod, "__all__", ()):
+            if sym not in fabric.__all__:
+                missing.append(f"{name}.{sym}")
+    if missing:
+        print("[ci_check] FAIL: repro.fabric.__all__ misses public symbols: "
+              + ", ".join(missing))
+        return False
+    print(f"[ci_check] public api: repro.fabric.__all__ covers all "
+          f"{len(fabric.__all__)} submodule exports")
+    return True
+
+
 def _resolve_dotted(ref: str) -> bool:
     """Import ``repro.a.b.C`` — module prefix via importlib, rest via getattr."""
     parts = ref.split(".")
@@ -276,6 +358,7 @@ def main():
     ap.add_argument("--out", default=str(REPO / "BENCH_fabric.json"))
     ap.add_argument("--shard-out", default=str(REPO / "BENCH_fabric_shard.json"))
     ap.add_argument("--program-out", default=str(REPO / "BENCH_fabric_program.json"))
+    ap.add_argument("--graph-out", default=str(REPO / "BENCH_fabric_graph.json"))
     args = ap.parse_args()
 
     ok = True
@@ -289,6 +372,10 @@ def main():
         ok = run_shard_smoke(Path(args.shard_out))
     if ok:
         ok = run_program_smoke(Path(args.program_out))
+    if ok:
+        ok = run_graph_smoke(Path(args.graph_out))
+    if ok:
+        ok = check_public_api()
     if ok:
         ok = check_docs()
     raise SystemExit(0 if ok else 1)
