@@ -13,7 +13,10 @@ executes the sharded matmul numerically through both chip backends
 measured-vs-modeled link-latency ratio; ``graph_smoke`` runs the
 full-transformer-block fused GRAPH forward (``repro.fabric.graph``) with
 real ``init_transformer`` weights against the per-node reference and checks
-the collective census against the documented budget. Doubles as the
+the collective census against the documented budget; ``obs_smoke`` runs the
+fused chain under an active ``repro.obs`` registry + JSONL tracer and
+reports the canonical metric names, fallback-counter semantics, and
+obs-on/off bit-identity the CI observability gate checks. Doubles as the
 ``fabric`` entry of ``benchmarks/run.py`` and the <30 s smoke benchmark of
 ``tools/ci_check.py``.
 
@@ -24,6 +27,8 @@ the collective census against the documented budget. Doubles as the
       python -m benchmarks.fabric_sweep --program-smoke
   PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m benchmarks.fabric_sweep --graph-smoke
+  PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m benchmarks.fabric_sweep --obs-smoke
 """
 
 from __future__ import annotations
@@ -43,6 +48,8 @@ def sweep_points(
     from repro.fabric.pipeline import fabric_throughput, iso_area_comparison
     from repro.fabric.topology import FabricConfig
 
+    from repro.obs import trace as obs_trace
+
     points = []
     for mode in modes:
         for bits in bit_range:
@@ -51,8 +58,12 @@ def sweep_points(
                 fb = FabricConfig(
                     mode=mode, adc_bits=bits, flash_bits=flash_bits, n_arrays=n_arrays
                 )
-                tp = fabric_throughput(fb)
-                iso = iso_area_comparison(fb)
+                with obs_trace.span(
+                    "fabric.sweep.point", mode=mode, adc_bits=bits,
+                    n_arrays=fb.resolved_n_arrays(),
+                ):
+                    tp = fabric_throughput(fb)
+                    iso = iso_area_comparison(fb)
                 points.append(
                     {
                         "mode": mode,
@@ -88,6 +99,8 @@ def shard_sweep_points(
     from repro.fabric.shard import shard_model
     from repro.fabric.topology import ChipMeshConfig, FabricConfig
 
+    from repro.obs import trace as obs_trace
+
     cfg = get_config("smollm-135m")
     points = []
     for data, model in meshes:
@@ -95,8 +108,9 @@ def shard_sweep_points(
             data=data, model=model, fabric=FabricConfig(mode=mode, n_arrays=n_arrays)
         )
         t0 = time.perf_counter()
-        sps = shard_model(cfg, cm, tokens=tokens, block_only=True)
-        rep = sharded_fabric_report(sps, cm)
+        with obs_trace.span("fabric.sweep.shard_point", mesh=f"{data}x{model}"):
+            sps = shard_model(cfg, cm, tokens=tokens, block_only=True)
+            rep = sharded_fabric_report(sps, cm)
         wall = time.perf_counter() - t0
         t = rep["totals"]
         points.append(
@@ -268,6 +282,15 @@ def program_smoke(mesh=(2, 2)) -> dict:
         per_layer_backend="sequential", per_layer_iters=1,
     )
     out["measured_over_modeled"] = out["measure"]["measured_over_modeled"]
+    out["link_clock_calibration"] = out["measure"]["link_clock_calibration"]
+    # a second measure on warm jit caches: tools/ci_check.py gates that the
+    # calibration constant is stable across runs, never its magnitude
+    # (per_layer=False — the stability run only needs the fused twins)
+    m2 = measure_forward(prog, x=x, weights=ws, key=nk, iters=2, per_layer=False)
+    out["link_clock_calibration_runs"] = [
+        out["measure"]["link_clock_calibration"],
+        m2["link_clock_calibration"],
+    ]
     return out
 
 
@@ -343,6 +366,99 @@ def graph_smoke(mesh=(2, 2)) -> dict:
         per_layer_backend="sequential", per_layer_iters=1,
     )
     out["measured_over_modeled"] = out["measure"]["measured_over_modeled"]
+    out["link_clock_calibration"] = out["measure"]["link_clock_calibration"]
+    # second warm measure for the CI stability-across-runs gate (fused
+    # twins only — the per-node reference is the expensive part)
+    m2 = measure_forward(prog, x=x, weights=ws, key=nk, iters=1, per_layer=False)
+    out["link_clock_calibration_runs"] = [
+        out["measure"]["link_clock_calibration"],
+        m2["link_clock_calibration"],
+    ]
+    return out
+
+
+def obs_smoke(mesh=(2, 2)) -> dict:
+    """Observability smoke (``repro.obs``): run the fused 3-layer chain under
+    an active metrics registry + JSONL tracer and report everything the CI
+    gate needs — the required metric names, the fallback counter staying 0 on
+    an aligned batch and reaching exactly 1 (reason ``ragged_batch``) on a
+    ragged batch, a parse-clean JSONL trace log, and bit-identical fused
+    outputs with observability on vs off. Meant for forced host devices
+    (``python -m benchmarks.fabric_sweep --obs-smoke`` inside
+    ``tools/ci_check.py``'s 8-device subprocess -> ``BENCH_obs.json``).
+    """
+    import os
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro import obs
+    from repro.core.cim_linear import CiMConfig
+    from repro.fabric import (
+        ChipMeshConfig,
+        FabricConfig,
+        compile_forward,
+        map_matmul,
+        shard_placement,
+    )
+
+    fb = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+    noisy = CiMConfig(
+        mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False,
+        comparator_sigma=0.05,
+    )
+    shapes = [("l0", 4, 64, 64), ("l1", 4, 64, 96), ("l2", 4, 96, 32)]
+    cmn = ChipMeshConfig(data=mesh[0], model=mesh[1], fabric=fb)
+    chain = [
+        shard_placement(map_matmul(n, m, k, nn, fb, cim=noisy), cmn)
+        for n, m, k, nn in shapes
+    ]
+    prog = compile_forward(chain, cmn, noisy)
+    ws = prog.random_weights(jax.random.PRNGKey(1))
+    nk = jax.random.PRNGKey(7)
+    x_aligned = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    x_ragged = x_aligned[:3]  # 3 rows % data axis 2 != 0 -> documented fallback
+
+    out = {
+        "devices": len(jax.devices()),
+        "mesh": f"{mesh[0]}x{mesh[1]}",
+        "backend": prog.backend,
+    }
+
+    # baseline with observability OFF — the neutrality reference
+    y_off = np.asarray(prog(x_aligned, ws, key=nk))
+
+    fd, jsonl_path = tempfile.mkstemp(suffix=".jsonl")
+    os.close(fd)
+    os.unlink(jsonl_path)  # JsonlSink lazily (re)creates it
+    try:
+        with obs.tracing(jsonl=jsonl_path), obs.collecting() as reg:
+            y_on = np.asarray(prog(x_aligned, ws, key=nk))
+            out["fallbacks_aligned"] = obs.get_value(
+                "fabric_fallback_total", reason=obs.REASON_RAGGED_BATCH
+            )
+            _ = np.asarray(prog(x_ragged, ws, key=nk))
+            out["fallbacks_ragged"] = obs.get_value(
+                "fabric_fallback_total", reason=obs.REASON_RAGGED_BATCH
+            )
+            out["fused_requests"] = obs.get_value(
+                "fabric_requests_total", path="fused"
+            )
+            out["fallback_requests"] = obs.get_value(
+                "fabric_requests_total", path="fallback"
+            )
+            out["conversions_total"] = obs.get_value("fabric_conversions_total")
+            out["link_bits_total"] = obs.get_value("fabric_link_bits_total")
+            out["metric_names"] = reg.names()
+            out["prometheus_lines"] = len(reg.prometheus_text().splitlines())
+        out["bit_identical_with_obs"] = bool((y_on == y_off).all())
+        records = obs.read_jsonl(jsonl_path)  # raises on any unparseable line
+        out["jsonl_records"] = len(records)
+        out["jsonl_names"] = sorted({r["name"] for r in records})
+    finally:
+        if os.path.exists(jsonl_path):
+            os.unlink(jsonl_path)
     return out
 
 
@@ -430,6 +546,14 @@ def main():
         "+ collective census vs budget) to stdout and exit "
         "(tools/ci_check.py runs this in a forced-8-device subprocess)",
     )
+    ap.add_argument(
+        "--obs-smoke",
+        action="store_true",
+        help="print the obs_smoke() JSON (repro.obs metric names, fallback "
+        "counter semantics, JSONL parse check, obs-on/off bit-identity) to "
+        "stdout and exit "
+        "(tools/ci_check.py runs this in a forced-8-device subprocess)",
+    )
     args = ap.parse_args()
     if args.backend_smoke:
         print(json.dumps(shard_backend_smoke(), indent=2, default=float))
@@ -439,6 +563,9 @@ def main():
         return
     if args.graph_smoke:
         print(json.dumps(graph_smoke(), indent=2, default=float))
+        return
+    if args.obs_smoke:
+        print(json.dumps(obs_smoke(), indent=2, default=float))
         return
     t0 = time.perf_counter()
     # shard-sweep data is written by tools/ci_check.py to BENCH_fabric_shard.json

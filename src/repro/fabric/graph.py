@@ -67,6 +67,9 @@ from repro.fabric.shard import (
 from repro.fabric.tiles import column_tile_matmul
 from repro.fabric.topology import ChipMeshConfig
 from repro.launch.mesh import make_chip_mesh
+from repro.obs import trace as obs_trace
+from repro.obs.fallback import REASON_RAGGED_BATCH, record_fallback
+from repro.fabric.program import _record_request, _record_request_fallback
 
 __all__ = [
     "GraphProgram",
@@ -535,6 +538,8 @@ class GraphProgram:
 
     def __call__(self, x, weights, key: Optional[jax.Array] = None, return_stats: bool = False):
         if self.backend != "shard_map":
+            _record_request_fallback("fabric.graph", self)
+            _record_request("fabric.graph", self, 0, fused=False)
             return per_node_forward(
                 x, weights, self.graph, self.placements, self.chip_mesh, self.cim,
                 key=key, backend="sequential", return_stats=return_stats,
@@ -548,11 +553,22 @@ class GraphProgram:
                 )
             # the documented ragged-batch path: fall back to the per-node
             # reference loop (bit-identical semantics, host dispatch)
+            record_fallback(
+                "fabric.graph", REASON_RAGGED_BATCH,
+                f"batch {x.shape[0]} % data axis {self.chip_mesh.data} != 0",
+            )
+            _record_request("fabric.graph", self, 0, fused=False)
             return per_node_forward(
                 x, weights, self.graph, self.placements, self.chip_mesh, self.cim,
                 key=key, backend="sequential", return_stats=return_stats,
             )
-        y, conversions, comparisons = self._fused(key is not None)(x, *flat)
+        _record_request("fabric.graph", self, x.shape[0] * x.shape[1], fused=True)
+        with obs_trace.span(
+            "fabric.graph.forward", n_matmuls=self.n_layers,
+            mesh=f"{self.chip_mesh.data}x{self.chip_mesh.model}",
+            tokens=x.shape[0] * x.shape[1],
+        ), obs_trace.annotate("fabric.graph.fused"):
+            y, conversions, comparisons = self._fused(key is not None)(x, *flat)
         if return_stats:
             return y, CimStats(conversions, comparisons)
         return y
@@ -662,6 +678,7 @@ def compile_graph_forward(
     elif problems:
         if backend == "shard_map":
             raise ValueError("fused graph program unavailable: " + "; ".join(problems))
+        obs_trace.event("fabric.graph.ineligible", problems=list(problems))
         resolved = "sequential"
     else:
         resolved = "shard_map"

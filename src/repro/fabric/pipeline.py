@@ -265,9 +265,16 @@ def link_validation(
     block-until-ready, host-simulation seconds); the modeled side is
     :func:`overlapped_mesh_latency`'s prediction in fabric seconds (10 MHz
     conversion clock, ``link_bits_per_s`` links). The two clock domains
-    differ, so ``measured_over_modeled`` is a calibration constant tracked
-    across PRs (``BENCH_fabric_program.json``), not a number expected to
-    be 1; ``None`` when the mesh has no links or nothing was measured.
+    differ, so their ratio is a *clock-domain calibration constant* — the
+    named ``link_clock_calibration`` key (``measured_over_modeled`` is kept
+    as a backward-compatible alias), tracked for *stability across runs* by
+    ``tools/ci_check.py`` (``BENCH_fabric_program.json`` /
+    ``BENCH_fabric_graph.json``), never expected to be 1; ``None`` when the
+    mesh has no links or nothing was measured. Both raw seconds are always
+    reported next to it. When ``repro.obs`` metrics collection is active the
+    three land on the ``fabric_modeled_link_seconds`` /
+    ``fabric_measured_collective_seconds`` / ``fabric_link_clock_calibration``
+    gauges.
 
     Example::
 
@@ -276,9 +283,13 @@ def link_validation(
         >>> cm = ChipMeshConfig(model=2, fabric=fb)
         >>> sps = [shard_placement(map_matmul(f"l{i}", 4, 64, 64, fb), cm) for i in range(2)]
         >>> v = link_validation(sps, measured_collective_s=1e-3)
-        >>> v["modeled_link_s"] > 0 and v["measured_over_modeled"] > 0
+        >>> v["modeled_link_s"] > 0 and v["link_clock_calibration"] > 0
+        True
+        >>> v["measured_over_modeled"] == v["link_clock_calibration"]
         True
     """
+    from repro.obs import metrics as obs_metrics
+
     ov = overlapped_mesh_latency(sharded, n_conversions)
     modeled = sum(sp.crosschip_latency_s for sp in sharded)
     ratio = (
@@ -286,6 +297,21 @@ def link_validation(
         if measured_collective_s is not None and modeled > 0
         else None
     )
+    obs_metrics.set_gauge(
+        "fabric_modeled_link_seconds", modeled,
+        help="Modeled reduce-scatter link time per forward pass (fabric clock).",
+    )
+    if measured_collective_s is not None:
+        obs_metrics.set_gauge(
+            "fabric_measured_collective_seconds", measured_collective_s,
+            help="Measured fused-minus-local collective wall time (host clock).",
+        )
+    if ratio is not None:
+        obs_metrics.set_gauge(
+            "fabric_link_clock_calibration", ratio,
+            help="Clock-domain calibration constant: measured host seconds / "
+            "modeled fabric-clock link seconds.",
+        )
     return {
         "modeled_link_s": modeled,
         "modeled_serial_latency_s": ov["serial_latency_s"],
@@ -293,6 +319,10 @@ def link_validation(
         "modeled_hidden_link_s": ov["hidden_link_s"],
         "modeled_link_hidden_fraction": ov["link_hidden_fraction"],
         "measured_collective_s": measured_collective_s,
+        # the clock-domain calibration constant (host-simulation seconds over
+        # modeled 10 MHz-fabric seconds); measured_over_modeled is the
+        # backward-compatible alias older BENCH files used
+        "link_clock_calibration": ratio,
         "measured_over_modeled": ratio,
     }
 

@@ -35,6 +35,7 @@ ratio is a calibration constant tracked across PRs (``tools/ci_check.py`` ->
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import List, Optional, Sequence, Tuple, Union
 
@@ -55,6 +56,14 @@ from repro.fabric.shard import (
 from repro.fabric.tiles import column_tile_matmul
 from repro.fabric.topology import ChipMeshConfig
 from repro.launch.mesh import make_chip_mesh
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.fallback import (
+    REASON_RAGGED_BATCH,
+    REASON_REQUESTED_SEQUENTIAL,
+    classify_fallback,
+    record_fallback,
+)
 
 __all__ = [
     "FabricProgram",
@@ -63,6 +72,57 @@ __all__ = [
     "measure_forward",
     "program_eligibility",
 ]
+
+
+def _record_request(component: str, program, m: int, fused: bool) -> None:
+    """Host-side per-request accounting shared by the chain and graph
+    programs: one ``fabric_requests_total{path=...}`` increment, plus — on
+    the fused path only, whose collectives never pass through
+    ``execute_sharded_matmul`` — the analytic conversion/link-bit totals the
+    per-layer loop would otherwise record matmul by matmul. Reads nothing
+    traced; no-op when metrics collection is inactive."""
+    if not obs_metrics.active():
+        return
+    obs_metrics.inc(
+        "fabric_requests_total",
+        help="Forward requests by execution path (fused shard_map vs fallback loop).",
+        path="fused" if fused else "fallback",
+    )
+    if fused:
+        cim = program.cim
+        rows = program.chip_mesh.fabric.rows
+        obs_metrics.inc(
+            "fabric_matmuls_total",
+            len(program.placements),
+            help="Mapped matmuls executed.",
+        )
+        obs_metrics.inc(
+            "fabric_conversions_total",
+            sum(
+                cim.a_bits * cim.w_bits * m * math.ceil(sp.k / rows) * sp.n
+                for sp in program.placements
+            ),
+            help="Analytic ADC conversions per executed matmul "
+            "(planes x rows x k-tiles x columns).",
+        )
+        obs_metrics.inc(
+            "fabric_link_bits_total",
+            sum(sp.crosschip_bits_per_pass for sp in program.placements),
+            help="Cross-chip reduce-scatter bits moved per executed matmul.",
+        )
+
+
+def _record_request_fallback(component: str, program, detail: str = "") -> None:
+    """Classify and emit the structured fallback record for a request that
+    left the fused path (``__call__``'s sequential branches)."""
+    if program.problems:
+        reason = classify_fallback(program.problems)
+        detail = detail or "; ".join(program.problems)
+    elif program.requested_backend == "sequential":
+        reason = REASON_REQUESTED_SEQUENTIAL
+    else:
+        reason = REASON_RAGGED_BATCH
+    record_fallback(component, reason, detail)
 
 _COLLECTIVE_PRIMS = ("all_gather", "reduce_scatter", "psum", "pmax", "ppermute", "all_to_all")
 
@@ -371,6 +431,8 @@ class FabricProgram:
 
     def __call__(self, x, weights, key: Optional[jax.Array] = None, return_stats: bool = False):
         if self.backend != "shard_map":
+            _record_request_fallback("fabric.program", self)
+            _record_request("fabric.program", self, 0, fused=False)
             return per_layer_forward(
                 x, weights, self.placements, self.chip_mesh, self.cim,
                 key=key, backend="sequential", return_stats=return_stats,
@@ -382,11 +444,21 @@ class FabricProgram:
                     f"fused program unavailable: batch rows {xm.shape[0]} are "
                     f"not divisible by the data axis ({self.chip_mesh.data})"
                 )
+            record_fallback(
+                "fabric.program", REASON_RAGGED_BATCH,
+                f"batch rows {xm.shape[0]} % data axis {self.chip_mesh.data} != 0",
+            )
+            _record_request("fabric.program", self, 0, fused=False)
             return per_layer_forward(
                 x, weights, self.placements, self.chip_mesh, self.cim,
                 key=key, backend="sequential", return_stats=return_stats,
             )
-        y, conversions, comparisons = self._fused(key is not None)(xm, *flat)
+        _record_request("fabric.program", self, xm.shape[0], fused=True)
+        with obs_trace.span(
+            "fabric.program.forward", n_layers=self.n_layers,
+            mesh=f"{self.chip_mesh.data}x{self.chip_mesh.model}", m=xm.shape[0],
+        ), obs_trace.annotate("fabric.program.fused"):
+            y, conversions, comparisons = self._fused(key is not None)(xm, *flat)
         y = y.reshape(*batch_shape, self.placements[-1].n)
         if return_stats:
             return y, CimStats(conversions, comparisons)
@@ -472,6 +544,7 @@ def compile_forward(
     elif problems:
         if backend == "shard_map":
             raise ValueError("fused shard_map program unavailable: " + "; ".join(problems))
+        obs_trace.event("fabric.program.ineligible", problems=list(problems))
         resolved = "sequential"
     else:
         resolved = "shard_map"
@@ -551,6 +624,7 @@ def measure_forward(
     iters: int = 2,
     per_layer_backend: Optional[str] = None,
     per_layer_iters: int = 1,
+    per_layer: bool = True,
 ) -> dict:
     """Wall-clock a fused program and isolate its collectives' time.
 
@@ -564,10 +638,12 @@ def measure_forward(
     gather-per-layer baseline the fusion removes — ``per_layer_backend``
     defaults to the program's own backend, and its dispatch/trace overhead
     per call is real steady-state cost, so it is timed with
-    ``per_layer_iters`` to keep smokes budgeted). The measured collective
-    seconds land next to the modeled link time via
-    ``fabric.pipeline.link_validation`` — measured host-simulation seconds
-    vs modeled fabric seconds, a calibration ratio tracked across PRs.
+    ``per_layer_iters`` to keep smokes budgeted; ``per_layer=False`` skips
+    the baseline entirely, how the CI calibration-stability re-measure
+    stays cheap). The measured collective seconds land next to the modeled
+    link time via ``fabric.pipeline.link_validation`` — measured
+    host-simulation seconds vs modeled fabric seconds, the
+    ``link_clock_calibration`` constant tracked across PRs.
 
     Example::
 
@@ -600,14 +676,15 @@ def measure_forward(
         out["fused_s"] = _time_best(lambda: fused(*args), iters)
         out["local_s"] = _time_best(lambda: local(*args), iters)
         measured_collective_s = max(0.0, out["fused_s"] - out["local_s"])
-    loop_backend = per_layer_backend or program.backend
-    out["per_layer_backend"] = loop_backend
-    per_layer = lambda: program.reference_forward(  # noqa: E731 — timed thunk
-        x, weights, key=key, backend=loop_backend
-    )
-    jax.block_until_ready(per_layer())  # warm the reference caches too
-    out["per_layer_s"] = _time_best(per_layer, per_layer_iters)
-    if "fused_s" in out:
-        out["fused_speedup_vs_per_layer"] = out["per_layer_s"] / max(out["fused_s"], 1e-12)
+    if per_layer:
+        loop_backend = per_layer_backend or program.backend
+        out["per_layer_backend"] = loop_backend
+        reference = lambda: program.reference_forward(  # noqa: E731 — timed thunk
+            x, weights, key=key, backend=loop_backend
+        )
+        jax.block_until_ready(reference())  # warm the reference caches too
+        out["per_layer_s"] = _time_best(reference, per_layer_iters)
+        if "fused_s" in out:
+            out["fused_speedup_vs_per_layer"] = out["per_layer_s"] / max(out["fused_s"], 1e-12)
     out.update(link_validation(program.placements, measured_collective_s))
     return out

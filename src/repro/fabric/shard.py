@@ -61,6 +61,9 @@ from repro.fabric.tiles import column_tile_matmul
 from repro.fabric.topology import ChipMeshConfig
 from repro.launch import shardings as sh
 from repro.launch.mesh import make_chip_mesh
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.fallback import REASON_RAGGED_BATCH, classify_fallback, record_fallback
 
 __all__ = [
     "ShardedPlacement",
@@ -302,6 +305,11 @@ def resolve_backend(sharded: ShardedPlacement, backend: str = "auto") -> str:
     if problems:
         if backend == "shard_map":
             raise ValueError("shard_map backend unavailable: " + "; ".join(problems))
+        # auto -> sequential: a real degradation, recorded as a structured
+        # fallback (no-op unless repro.obs tracing/metrics are active)
+        record_fallback(
+            "fabric.shard", classify_fallback(problems), "; ".join(problems)
+        )
         return "sequential"
     if backend == "auto" and cm.n_chips == 1:
         return "sequential"  # single chip: SPMD dispatch is pure overhead
@@ -446,46 +454,74 @@ def execute_sharded_matmul(
                 f"shard_map backend unavailable: batch rows {xm.shape[0]} are "
                 f"not divisible by the data axis ({sharded.d_splits})"
             )
+        record_fallback(
+            "fabric.shard", REASON_RAGGED_BATCH,
+            f"batch rows {xm.shape[0]} % data axis {sharded.d_splits} != 0",
+        )
         backend = "sequential"
+    if obs_metrics.active():
+        # host-side analytic accounting only: the sharded chips jointly
+        # perform the same planes x rows x k-tiles x columns of conversions
+        # as the unsharded op, and the link bits are the placement's
+        # (C-1) * M * N * psum_bits reduce-scatter traffic
+        obs_metrics.inc("fabric_matmuls_total", help="Mapped matmuls executed.")
+        obs_metrics.inc(
+            "fabric_conversions_total",
+            cim.a_bits * cim.w_bits * xm.shape[0] * math.ceil(k / fabric.rows) * n,
+            help="Analytic ADC conversions per executed matmul "
+            "(planes x rows x k-tiles x columns).",
+        )
+        obs_metrics.inc(
+            "fabric_link_bits_total",
+            sharded.crosschip_bits_per_pass,
+            help="Cross-chip reduce-scatter bits moved per executed matmul.",
+        )
+    span = obs_trace.span(
+        "fabric.shard.matmul",
+        layer=sharded.name, m=xm.shape[0], k=k, n=n,
+        backend=backend, mesh=f"{sharded.d_splits}x{sharded.k_splits}",
+    )
     k_splits, d_splits = sharded.k_splits, sharded.d_splits
     k_tiles = math.ceil(k / fabric.rows)
     cols = fabric.cols
 
-    # fabric-level quantization: global scales, exactly the unsharded front-end
-    x_int, sx = quantize_symmetric(xm, cim.a_bits, cim.a_signed)
-    w_int, sw = quantize_symmetric(w, cim.w_bits, cim.w_signed, per_axis=-1)
+    with span:
+        # fabric-level quantization: global scales, exactly the unsharded
+        # front-end
+        x_int, sx = quantize_symmetric(xm, cim.a_bits, cim.a_signed)
+        w_int, sw = quantize_symmetric(w, cim.w_bits, cim.w_signed, per_axis=-1)
 
-    if backend == "shard_map":
-        y_q, conversions, comparisons = _shard_map_matmul(
-            x_int, w_int, sx, sw, sharded, cim, key
-        )
-    else:
-        m_total = xm.shape[0]
-        m_shard = m_total // d_splits if d_splits > 1 else m_total
-        conversions = jnp.zeros((), jnp.int32)
-        comparisons = jnp.zeros((), jnp.int32)
-        data_parts = []
-        for d in range(d_splits):
-            m0 = d * m_shard
-            m1 = (d + 1) * m_shard if d < d_splits - 1 else m_total
-            x_d = x_int[m0:m1]
-            total = None
-            for c in range(k_splits):
-                k0, k1 = _k_slice(k, fabric.rows, k_tiles, k_splits, c)
-                chip_key = _chip_noise_key(key, d * k_splits + c)
-                y_c, st = column_tile_matmul(
-                    x_d[:, k0:k1], w_int[k0:k1], cim, cols, key=chip_key
-                )
-                conversions = conversions + st.conversions
-                comparisons = comparisons + st.comparisons
-                # digital partial-sum combine == the reduce-scatter's sum
-                total = y_c if total is None else total + y_c
-            data_parts.append(total * sx * sw)
-        y_q = jnp.concatenate(data_parts, axis=0)
+        if backend == "shard_map":
+            y_q, conversions, comparisons = _shard_map_matmul(
+                x_int, w_int, sx, sw, sharded, cim, key
+            )
+        else:
+            m_total = xm.shape[0]
+            m_shard = m_total // d_splits if d_splits > 1 else m_total
+            conversions = jnp.zeros((), jnp.int32)
+            comparisons = jnp.zeros((), jnp.int32)
+            data_parts = []
+            for d in range(d_splits):
+                m0 = d * m_shard
+                m1 = (d + 1) * m_shard if d < d_splits - 1 else m_total
+                x_d = x_int[m0:m1]
+                total = None
+                for c in range(k_splits):
+                    k0, k1 = _k_slice(k, fabric.rows, k_tiles, k_splits, c)
+                    chip_key = _chip_noise_key(key, d * k_splits + c)
+                    y_c, st = column_tile_matmul(
+                        x_d[:, k0:k1], w_int[k0:k1], cim, cols, key=chip_key
+                    )
+                    conversions = conversions + st.conversions
+                    comparisons = comparisons + st.comparisons
+                    # digital partial-sum combine == the reduce-scatter's sum
+                    total = y_c if total is None else total + y_c
+                data_parts.append(total * sx * sw)
+            y_q = jnp.concatenate(data_parts, axis=0)
 
-    if cim.ste:
-        y_lin = xm @ w
-        y_q = y_lin + jax.lax.stop_gradient(y_q - y_lin)
+        if cim.ste:
+            y_lin = xm @ w
+            y_q = y_lin + jax.lax.stop_gradient(y_q - y_lin)
 
     y = y_q.reshape(*batch_shape, n)
     if return_stats:

@@ -12,6 +12,7 @@ CLI (CPU-scale): examples/serve_lm.py wraps this.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 from typing import Optional
@@ -24,6 +25,8 @@ from repro.configs.base import ModelConfig, reduced
 from repro.configs.registry import get_config
 from repro.core.cim_linear import CiMConfig
 from repro.models import build_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 __all__ = ["ServeSettings", "serve_batch", "parse_fabric_mesh"]
 
@@ -74,6 +77,12 @@ def serve_batch(
     model: estimated CiM latency / energy / EMA per request are printed with
     the batch and folded into the returned dict — the first step of
     fabric-aware batching decisions (ROADMAP).
+
+    With ``repro.obs`` metrics collection active (serve CLI:
+    ``--obs-metrics``) the batching log line is replaced by the per-request
+    observability summary — fused/fallback request counters, conversion and
+    link-bit totals, and the measured-vs-modeled link latency with the named
+    ``link_clock_calibration`` constant — read back from the live registry.
     """
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(st.seed))
@@ -87,20 +96,31 @@ def serve_batch(
     decode = jax.jit(model.decode_step)
 
     t0 = time.time()
-    cache = model.make_cache(b, total)
-    logits, cache = prefill(params, jnp.asarray(prompts), cache)
-    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    with obs_trace.span("serve.prefill", batch=b, prompt_len=s):
+        cache = model.make_cache(b, total)
+        logits, cache = prefill(params, jnp.asarray(prompts), cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        jax.block_until_ready(next_tok)
     t_prefill = time.time() - t0
 
     out_tokens = [next_tok]
     t0 = time.time()
-    for i in range(st.gen_len - 1):
-        pos = jnp.asarray(s + i, jnp.int32)
-        logits, cache = decode(params, next_tok, pos, cache)
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        out_tokens.append(next_tok)
-    jax.block_until_ready(next_tok)
+    with obs_trace.span("serve.decode", batch=b, gen_len=st.gen_len):
+        for i in range(st.gen_len - 1):
+            pos = jnp.asarray(s + i, jnp.int32)
+            logits, cache = decode(params, next_tok, pos, cache)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            out_tokens.append(next_tok)
+        jax.block_until_ready(next_tok)
     t_decode = time.time() - t0
+
+    obs_metrics.inc("serve_requests_total", b, help="Requests served (batch slots).")
+    obs_metrics.observe(
+        "serve_prefill_seconds", t_prefill, help="Batched prefill wall time."
+    )
+    obs_metrics.observe(
+        "serve_decode_seconds", t_decode, help="Batched decode wall time."
+    )
 
     gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
     out = {
@@ -136,15 +156,49 @@ def serve_batch(
             "exec_backend": fabric_rollup.get("exec_backend", "n/a"),
         }
         out["fabric"] = fab
-        print(
-            f"[serve] batch {b}x{total} tok on {fab['n_chips']} chip(s) "
-            f"[{fab['exec_backend']}]: est. "
-            f"{fab['latency_s_per_request']*1e3:.3g} ms, "
-            f"{fab['energy_uj_per_request']:.3g} uJ per request "
-            f"(on-chip EMA {fab['onchip_ema_bits_per_request']:.3g} bits, "
-            f"cross-chip {fab['crosschip_bits_per_request']:.3g} bits, "
-            f"{'resident' if fab['model_resident'] else 'reloading'})"
-        )
+        if obs_metrics.active():
+            # the per-request observability summary line: live counters from
+            # the registry (fed by the fabric layers + the validation pass)
+            # replace the static cost-model printout
+            obs_metrics.inc(
+                "fabric_ema_bits_total",
+                fab["onchip_ema_bits_per_request"] * b,
+                help="On-chip external-memory-access bits for requests served.",
+            )
+            fused = obs_metrics.get_value("fabric_requests_total", path="fused")
+            fell = obs_metrics.get_value("fabric_requests_total", path="fallback")
+            conv = obs_metrics.get_value("fabric_conversions_total")
+            bits = obs_metrics.get_value("fabric_link_bits_total")
+            modeled = obs_metrics.get_value("fabric_modeled_link_seconds")
+            measured = obs_metrics.get_value("fabric_measured_collective_seconds")
+            calib = obs_metrics.get_value("fabric_link_clock_calibration")
+            obs_trace.event(
+                "serve.request_summary", batch=b, total_tokens=total,
+                fused_requests=fused, fallback_requests=fell,
+                conversions=conv, link_bits=bits,
+                modeled_link_s=modeled, measured_collective_s=measured,
+                link_clock_calibration=calib,
+            )
+            print(
+                f"[serve] obs batch {b}x{total} tok on {fab['n_chips']} chip(s) "
+                f"[{fab['exec_backend']}]: fused {fused:.0f} / fallback "
+                f"{fell:.0f} requests; {conv:.3g} conversions, "
+                f"{bits:.3g} link bits; link modeled {modeled:.3g} s vs "
+                f"measured {measured:.3g} s "
+                f"(link_clock_calibration {calib:.3g}); est. "
+                f"{fab['latency_s_per_request']*1e3:.3g} ms, "
+                f"{fab['energy_uj_per_request']:.3g} uJ per request"
+            )
+        else:
+            print(
+                f"[serve] batch {b}x{total} tok on {fab['n_chips']} chip(s) "
+                f"[{fab['exec_backend']}]: est. "
+                f"{fab['latency_s_per_request']*1e3:.3g} ms, "
+                f"{fab['energy_uj_per_request']:.3g} uJ per request "
+                f"(on-chip EMA {fab['onchip_ema_bits_per_request']:.3g} bits, "
+                f"cross-chip {fab['crosschip_bits_per_request']:.3g} bits, "
+                f"{'resident' if fab['model_resident'] else 'reloading'})"
+            )
     return out
 
 
@@ -195,8 +249,50 @@ def main():
         "(repro.fabric.compile_forward, one block chain) as the validation "
         "pass and report measured-vs-modeled link latency",
     )
+    ap.add_argument(
+        "--obs-log",
+        default=None,
+        metavar="PATH",
+        help="stream repro.obs spans/events (fabric fallbacks, serve "
+        "prefill/decode, request summaries) to PATH as JSONL",
+    )
+    ap.add_argument(
+        "--obs-metrics",
+        action="store_true",
+        help="collect repro.obs metrics for the whole run: the batching log "
+        "becomes the per-request obs summary line and the Prometheus text "
+        "exposition prints at exit",
+    )
+    ap.add_argument(
+        "--obs-metrics-out",
+        default=None,
+        metavar="PATH",
+        help="write the Prometheus exposition to PATH instead of stdout "
+        "(implies --obs-metrics)",
+    )
     args = ap.parse_args()
 
+    with contextlib.ExitStack() as stack:
+        if args.obs_log:
+            stack.enter_context(obs_trace.tracing(jsonl=args.obs_log))
+        reg = None
+        if args.obs_metrics or args.obs_metrics_out:
+            reg = stack.enter_context(obs_metrics.collecting())
+        _serve_main(args, ap)
+        if args.obs_log:
+            print(f"[serve] obs JSONL event log: {args.obs_log}")
+        if reg is not None:
+            if args.obs_metrics_out:
+                from repro.obs.sinks import write_prometheus
+
+                write_prometheus(reg, args.obs_metrics_out)
+                print(f"[serve] obs metrics exposition: {args.obs_metrics_out}")
+            else:
+                print("\n[serve] obs metrics exposition:")
+                print(reg.prometheus_text(), end="")
+
+
+def _serve_main(args, ap):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)

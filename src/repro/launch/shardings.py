@@ -25,6 +25,9 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 __all__ = [
     "logical_to_mesh",
     "spec_for",
@@ -72,6 +75,13 @@ def record_fallbacks() -> Iterator[list[str]]:
 def _record_fallback(msg: str) -> None:
     for rec in _RECORDERS.get():
         rec.append(msg)
+    # replication fallbacks double as observability signals: a structured
+    # trace event plus a counter, both no-ops unless repro.obs is active
+    obs_trace.event("sharding.fallback", detail=msg)
+    obs_metrics.inc(
+        "sharding_fallback_total",
+        help="Parameter/batch sharding dims replicated for non-divisibility.",
+    )
 
 
 def logical_to_mesh(mesh: Mesh) -> dict[str, tuple[str, ...]]:

@@ -11,18 +11,27 @@ measured/modeled link-latency ratio -> ``BENCH_fabric_program.json``) — the
 full-transformer-block fused GRAPH smoke (``repro.fabric.graph`` under
 forced 8 host devices: real ``init_transformer`` weights bit-exact vs the
 per-node reference on 1x1, collective census == documented budget ->
-``BENCH_fabric_graph.json``) — the public-api gate (every submodule
-``__all__`` symbol re-exported from ``repro.fabric.__all__``) — and
-the docs gate: ``README.md`` and
-``docs/fabric.md`` must exist, every dotted ``repro.*`` reference in them
-must import, and every ``repro.fabric`` public symbol must be documented in
-``docs/fabric.md``. Exits non-zero if any stage fails or a smoke benchmark
-blows its time budget.
+``BENCH_fabric_graph.json``) — the observability smoke (``repro.obs``
+under forced 8 host devices: required metric names present, the fallback
+counter 0 on an aligned fused batch and exactly 1 ``ragged_batch`` on a
+ragged one, the JSONL trace log parse-clean, fused outputs bit-identical
+with observability on vs off -> ``BENCH_obs.json``) — the calibration
+stability gate (``link_clock_calibration`` agrees across back-to-back runs
+in the program/graph smokes; its magnitude is host-dependent and never
+gated) — the public-api gate (every submodule ``__all__`` symbol
+re-exported from ``repro.fabric.__all__`` / ``repro.obs.__all__``) — and
+the docs gate: ``README.md``,
+``docs/fabric.md``, and ``docs/observability.md`` must exist, every dotted
+``repro.*`` reference in them must import, every ``repro.fabric`` public
+symbol must be documented in ``docs/fabric.md``, and every ``repro.obs``
+public symbol in ``docs/observability.md``. Exits non-zero if any stage
+fails or a smoke benchmark blows its time budget.
 
   python tools/ci_check.py [--skip-tests] [--out BENCH_fabric.json]
                            [--shard-out BENCH_fabric_shard.json]
                            [--program-out BENCH_fabric_program.json]
                            [--graph-out BENCH_fabric_graph.json]
+                           [--obs-out BENCH_obs.json]
 """
 
 from __future__ import annotations
@@ -227,7 +236,7 @@ def run_program_smoke(out: Path) -> bool:
         print(f"[ci_check] FAIL: fused forward should contain at most one "
               f"all-gather, found {gathers}")
         return False
-    return True
+    return _check_calibration_stability("program", payload)
 
 
 def run_graph_smoke(out: Path) -> bool:
@@ -277,33 +286,127 @@ def run_graph_smoke(out: Path) -> bool:
         print(f"[ci_check] FAIL: fused graph should contain at most one "
               f"all-gather, found {gathers}")
         return False
+    return _check_calibration_stability("graph", payload)
+
+
+def _check_calibration_stability(which: str, payload: dict) -> bool:
+    """Gate the named ``link_clock_calibration`` constant on *stability across
+    runs*, never magnitude: the ratio of measured host-simulation seconds to
+    modeled fabric-link seconds depends on the host, but back-to-back warm
+    runs of the same smoke must land within a generous factor of each other
+    (host-timer jitter, not a regression in the link model)."""
+    runs = [r for r in payload.get("link_clock_calibration_runs", []) if r]
+    if not runs:
+        print(f"[ci_check] FAIL: {which} smoke reported no "
+              f"link_clock_calibration runs: "
+              f"{payload.get('link_clock_calibration_runs')}")
+        return False
+    spread = max(runs) / min(runs)
+    print(f"[ci_check] {which} link_clock_calibration: "
+          f"{', '.join(f'{r:.3g}' for r in runs)} (spread {spread:.2f}x)")
+    if spread > 100.0:
+        print(f"[ci_check] FAIL: {which} link_clock_calibration unstable "
+              f"across runs: {runs} ({spread:.1f}x spread)")
+        return False
+    return True
+
+
+# metric names the fabric/serve layers must emit under an active registry;
+# the canonical table lives in docs/observability.md
+REQUIRED_OBS_METRICS = (
+    "fabric_conversions_total",
+    "fabric_fallback_total",
+    "fabric_link_bits_total",
+    "fabric_matmuls_total",
+    "fabric_requests_total",
+)
+
+
+def run_obs_smoke(out: Path) -> bool:
+    """Observability smoke (``repro.obs``) under forced 8 host devices: the
+    fused chain must emit every required metric name, keep the
+    ``ragged_batch`` fallback counter at 0 on the aligned batch and exactly 1
+    on a ragged one, write a parse-clean JSONL trace log, and produce
+    bit-identical fused outputs with observability on vs off. Recorded to
+    ``BENCH_obs.json`` with its own budget."""
+    t0 = time.perf_counter()
+    payload = _run_forced_device_smoke("--obs-smoke")
+    wall = time.perf_counter() - t0
+    payload["wall_s"] = wall
+    out.write_text(json.dumps(payload, indent=2, default=float))
+    if "error" in payload:
+        print(f"[ci_check] FAIL: obs smoke failed: {payload['error']}")
+        return False
+    print(
+        f"[ci_check] obs smoke: {payload['devices']} devices, mesh "
+        f"{payload['mesh']}, {len(payload.get('metric_names', []))} metrics, "
+        f"{payload.get('jsonl_records')} trace records in {wall:.1f}s -> {out}"
+    )
+    if wall > 2 * SMOKE_BUDGET_S:
+        print(f"[ci_check] FAIL: obs smoke took {wall:.1f}s > "
+              f"{2 * SMOKE_BUDGET_S}s budget")
+        return False
+    if payload.get("backend") != "shard_map":
+        print(f"[ci_check] FAIL: obs smoke chain did not resolve to shard_map "
+              f"under forced devices: {payload.get('backend')}")
+        return False
+    missing = [m for m in REQUIRED_OBS_METRICS
+               if m not in payload.get("metric_names", [])]
+    if missing:
+        print(f"[ci_check] FAIL: obs smoke missing required metrics: {missing}")
+        return False
+    if payload.get("fallbacks_aligned") != 0:
+        print(f"[ci_check] FAIL: aligned fused batch recorded fallbacks: "
+              f"{payload.get('fallbacks_aligned')}")
+        return False
+    if payload.get("fallbacks_ragged") != 1:
+        print(f"[ci_check] FAIL: ragged batch should record exactly one "
+              f"ragged_batch fallback, got {payload.get('fallbacks_ragged')}")
+        return False
+    if not payload.get("bit_identical_with_obs"):
+        print("[ci_check] FAIL: fused outputs differ with observability on "
+              "vs off — instrumentation is perturbing the compiled program")
+        return False
+    # obs_smoke re-reads the log through read_jsonl, which raises on any
+    # unparseable line — reaching a positive count IS the parse-clean gate
+    if not payload.get("jsonl_records", 0) > 0:
+        print(f"[ci_check] FAIL: obs smoke JSONL log is empty or unparsed: "
+              f"{payload.get('jsonl_records')}")
+        return False
     return True
 
 
 def check_public_api() -> bool:
-    """Every symbol a ``repro.fabric`` submodule exports via ``__all__``
-    must be re-exported from ``repro.fabric.__all__`` — a new public symbol
-    that misses the package surface fails CI."""
+    """Every symbol a ``repro.fabric`` / ``repro.obs`` submodule exports via
+    ``__all__`` must be re-exported from the package ``__all__`` — a new
+    public symbol that misses the package surface fails CI."""
     sys.path.insert(0, str(REPO / "src"))
     import repro.fabric as fabric
+    import repro.obs as obs
 
-    submodules = (
-        "execute", "graph", "mapper", "pipeline", "program", "report",
-        "shard", "tiles", "topology",
+    packages = (
+        (fabric, "repro.fabric", (
+            "execute", "graph", "mapper", "pipeline", "program", "report",
+            "shard", "tiles", "topology",
+        )),
+        (obs, "repro.obs", ("fallback", "metrics", "sinks", "trace")),
     )
-    missing = []
-    for name in submodules:
-        mod = importlib.import_module(f"repro.fabric.{name}")
-        for sym in getattr(mod, "__all__", ()):
-            if sym not in fabric.__all__:
-                missing.append(f"{name}.{sym}")
-    if missing:
-        print("[ci_check] FAIL: repro.fabric.__all__ misses public symbols: "
-              + ", ".join(missing))
-        return False
-    print(f"[ci_check] public api: repro.fabric.__all__ covers all "
-          f"{len(fabric.__all__)} submodule exports")
-    return True
+    ok = True
+    for pkg, pkg_name, submodules in packages:
+        missing = []
+        for name in submodules:
+            mod = importlib.import_module(f"{pkg_name}.{name}")
+            for sym in getattr(mod, "__all__", ()):
+                if sym not in pkg.__all__:
+                    missing.append(f"{name}.{sym}")
+        if missing:
+            print(f"[ci_check] FAIL: {pkg_name}.__all__ misses public "
+                  "symbols: " + ", ".join(missing))
+            ok = False
+        else:
+            print(f"[ci_check] public api: {pkg_name}.__all__ covers all "
+                  f"{len(pkg.__all__)} submodule exports")
+    return ok
 
 
 def _resolve_dotted(ref: str) -> bool:
@@ -324,12 +427,18 @@ def _resolve_dotted(ref: str) -> bool:
 
 
 def check_docs() -> bool:
-    """README.md / docs/fabric.md exist and reference only live symbols."""
+    """README.md / docs/fabric.md / docs/observability.md exist and
+    reference only live symbols."""
     sys.path.insert(0, str(REPO / "src"))
     import repro.fabric as fabric
+    import repro.obs as obs
 
     ok = True
-    docs = {"README.md": REPO / "README.md", "docs/fabric.md": REPO / "docs" / "fabric.md"}
+    docs = {
+        "README.md": REPO / "README.md",
+        "docs/fabric.md": REPO / "docs" / "fabric.md",
+        "docs/observability.md": REPO / "docs" / "observability.md",
+    }
     for name, path in docs.items():
         if not path.is_file():
             print(f"[ci_check] FAIL: {name} is missing")
@@ -347,8 +456,15 @@ def check_docs() -> bool:
         if sym not in fabric_doc:
             print(f"[ci_check] FAIL: docs/fabric.md does not document repro.fabric.{sym}")
             ok = False
+    obs_doc = docs["docs/observability.md"].read_text()
+    for sym in obs.__all__:
+        if sym not in obs_doc:
+            print(f"[ci_check] FAIL: docs/observability.md does not document "
+                  f"repro.obs.{sym}")
+            ok = False
     if ok:
-        print("[ci_check] docs: README.md + docs/fabric.md present, all references live")
+        print("[ci_check] docs: README.md + docs/fabric.md + "
+              "docs/observability.md present, all references live")
     return ok
 
 
@@ -359,6 +475,7 @@ def main():
     ap.add_argument("--shard-out", default=str(REPO / "BENCH_fabric_shard.json"))
     ap.add_argument("--program-out", default=str(REPO / "BENCH_fabric_program.json"))
     ap.add_argument("--graph-out", default=str(REPO / "BENCH_fabric_graph.json"))
+    ap.add_argument("--obs-out", default=str(REPO / "BENCH_obs.json"))
     args = ap.parse_args()
 
     ok = True
@@ -374,6 +491,8 @@ def main():
         ok = run_program_smoke(Path(args.program_out))
     if ok:
         ok = run_graph_smoke(Path(args.graph_out))
+    if ok:
+        ok = run_obs_smoke(Path(args.obs_out))
     if ok:
         ok = check_public_api()
     if ok:
