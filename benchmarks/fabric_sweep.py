@@ -13,7 +13,10 @@ executes the sharded matmul numerically through both chip backends
 measured-vs-modeled link-latency ratio; ``graph_smoke`` runs the
 full-transformer-block fused GRAPH forward (``repro.fabric.graph``) with
 real ``init_transformer`` weights against the per-node reference and checks
-the collective census against the documented budget; ``obs_smoke`` runs the
+the collective census against the documented budget; ``scan_smoke``
+compiles the SAME graph unrolled and scanned (``scan_layers=True``) at
+``n_layers=8`` and records the compile-time speedup plus scanned-vs-unrolled
+bit-exactness; ``obs_smoke`` runs the
 fused chain under an active ``repro.obs`` registry + JSONL tracer and
 reports the canonical metric names, fallback-counter semantics, and
 obs-on/off bit-identity the CI observability gate checks. Doubles as the
@@ -27,6 +30,8 @@ obs-on/off bit-identity the CI observability gate checks. Doubles as the
       python -m benchmarks.fabric_sweep --program-smoke
   PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m benchmarks.fabric_sweep --graph-smoke
+  PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m benchmarks.fabric_sweep --scan-smoke
   PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m benchmarks.fabric_sweep --obs-smoke
 """
@@ -377,6 +382,80 @@ def graph_smoke(mesh=(2, 2)) -> dict:
     return out
 
 
+def scan_smoke(depth: int = 8, mesh=(2, 2)) -> dict:
+    """Scan-over-layers smoke (``compile_graph_forward(scan_layers=True)``):
+    at ``depth`` transformer blocks, AOT trace+compile the unrolled and the
+    scanned 1x1 programs (``fn.lower(...).compile()`` isolates exactly the
+    cost the scan collapses), run BOTH compiled executables on the same
+    noisy-ADC inputs and check bit-exactness, then check the scanned
+    program's collective census on the forced mesh against the documented
+    budget AND the per-block census × ``n_blocks`` + tail decomposition.
+    Meant for forced host devices
+    (``python -m benchmarks.fabric_sweep --scan-smoke`` inside
+    ``tools/ci_check.py``'s 8-device subprocess -> ``BENCH_fabric_scan.json``).
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs.base import ModelConfig
+    from repro.core.cim_linear import CiMConfig
+    from repro.fabric import ChipMeshConfig, FabricConfig, compile_graph_forward
+
+    cfg = ModelConfig(
+        name="scan-smoke", family="dense", n_layers=depth, d_model=64, vocab=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, pad_vocab_multiple=16,
+        param_dtype="float32", compute_dtype="float32",
+    )
+    fb = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+    noisy = CiMConfig(
+        mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False,
+        comparator_sigma=0.05,
+    )
+    out = {
+        "devices": len(jax.devices()), "n_layers": depth,
+        "mesh": f"{mesh[0]}x{mesh[1]}",
+    }
+    cm1 = ChipMeshConfig(fabric=fb)
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, cfg.d_model))
+    compiled = {}
+    for tag, scan in (("unrolled", False), ("scanned", True)):
+        prog = compile_graph_forward(cfg, cm1, noisy, tokens=4, scan_layers=scan)
+        # random_weights stacks the SAME per-layer draws for the scanned
+        # form, so one key yields corresponding weights in both programs
+        args = prog._fused_args(x, prog.random_weights(jax.random.PRNGKey(3)), key)
+        t0 = time.perf_counter()
+        exe = prog._fused(True).lower(*args).compile()
+        out[f"{tag}_compile_s"] = time.perf_counter() - t0
+        compiled[tag] = (exe, args)
+    out["compile_speedup"] = out["unrolled_compile_s"] / out["scanned_compile_s"]
+    y_un = np.asarray(compiled["unrolled"][0](*compiled["unrolled"][1])[0])
+    y_sc = np.asarray(compiled["scanned"][0](*compiled["scanned"][1])[0])
+    out["bit_exact_1x1"] = bool((y_un == y_sc).all())
+    out["max_abs_diff_1x1"] = float(np.abs(y_un - y_sc).max())
+
+    # census on the forced mesh is trace-only (jax.make_jaxpr, no XLA
+    # compile) — cheap at any depth, which is itself part of the point
+    cmn = ChipMeshConfig(data=mesh[0], model=mesh[1], fabric=fb)
+    sc = compile_graph_forward(cfg, cmn, noisy, tokens=8, scan_layers=True)
+    out["backend"] = sc.backend
+    out["problems"] = sc.problems
+    if sc.backend == "shard_map":
+        counts = sc.collective_counts(key=key)
+        budget = sc.collective_budget()
+        blk = sc.block_graph.block_census(cmn.model)
+        tail = sc.tail_graph.collective_budget(cmn.model)
+        out["collectives"] = counts
+        out["collective_budget"] = budget
+        out["block_census_x_layers"] = {
+            k: blk[k] * sc.n_blocks + tail[k] for k in blk
+        }
+        out["budget_match"] = (
+            counts == budget == out["block_census_x_layers"]
+        )
+    return out
+
+
 def obs_smoke(mesh=(2, 2)) -> dict:
     """Observability smoke (``repro.obs``): run the fused 3-layer chain under
     an active metrics registry + JSONL tracer and report everything the CI
@@ -547,6 +626,14 @@ def main():
         "(tools/ci_check.py runs this in a forced-8-device subprocess)",
     )
     ap.add_argument(
+        "--scan-smoke",
+        action="store_true",
+        help="print the scan_smoke() JSON (scan-over-layers vs unrolled "
+        "graph compile wall-clock at n_layers=8, bit-exact noisy forward, "
+        "census == per-block x n_layers + tail) to stdout and exit "
+        "(tools/ci_check.py runs this in a forced-8-device subprocess)",
+    )
+    ap.add_argument(
         "--obs-smoke",
         action="store_true",
         help="print the obs_smoke() JSON (repro.obs metric names, fallback "
@@ -563,6 +650,9 @@ def main():
         return
     if args.graph_smoke:
         print(json.dumps(graph_smoke(), indent=2, default=float))
+        return
+    if args.scan_smoke:
+        print(json.dumps(scan_smoke(), indent=2, default=float))
         return
     if args.obs_smoke:
         print(json.dumps(obs_smoke(), indent=2, default=float))

@@ -62,7 +62,9 @@ from repro.fabric.graph import (
     graph_eligibility,
     per_node_forward,
     shard_forward_graph,
+    stack_block_weights,
     transformer_graph_weights,
+    unstack_block_weights,
 )
 from repro.fabric.mapper import (
     ForwardGraph,
@@ -71,6 +73,7 @@ from repro.fabric.mapper import (
     TileAssignment,
     map_matmul,
     map_model,
+    model_block_template,
     model_forward_chain,
     model_forward_graph,
     model_matmuls,
@@ -128,6 +131,7 @@ __all__ = [
     "GraphNode",
     "ForwardGraph",
     "model_forward_graph",
+    "model_block_template",
     "conversion_cycles",
     "fabric_throughput",
     "iso_area_comparison",
@@ -155,6 +159,8 @@ __all__ = [
     "graph_eligibility",
     "shard_forward_graph",
     "transformer_graph_weights",
+    "stack_block_weights",
+    "unstack_block_weights",
     "fabric_report",
     "sharded_fabric_report",
     "graph_section",

@@ -42,6 +42,16 @@ noisy ADC included, and matches it on real multi-chip meshes.
 :func:`transformer_graph_weights` closes the real-weights loop: it adapts
 ``models.transformer.init_transformer`` parameters into the graph's weight
 dict, so actual model logits — not synthetic chains — run on the fabric.
+
+``compile_graph_forward(scan_layers=True)`` is the depth-constant form:
+the repeated block (``mapper.model_block_template``) traces ONCE and runs
+under ``jax.lax.scan`` over weights stacked on a leading layer axis
+(:func:`stack_block_weights` / :func:`unstack_block_weights`), the
+embed-side norm and unembed stay outside the scan, the residual stream
+stays feature-sharded across iterations, and per-layer noise keys are
+derived inside the body from the traced global matmul index — so the
+scanned program is still bit-for-bit the unrolled one on a 1x1 mesh while
+trace+compile cost stops growing with ``n_layers``.
 """
 
 from __future__ import annotations
@@ -57,7 +67,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.cim_linear import CimStats, CiMConfig, quantize_symmetric
-from repro.fabric.mapper import ForwardGraph, model_forward_graph
+from repro.fabric.mapper import ForwardGraph, model_block_template, model_forward_graph
 from repro.fabric.shard import (
     ShardedPlacement,
     _chip_noise_key,
@@ -78,6 +88,8 @@ __all__ = [
     "graph_eligibility",
     "shard_forward_graph",
     "transformer_graph_weights",
+    "stack_block_weights",
+    "unstack_block_weights",
 ]
 
 _NEG = -1e30
@@ -289,6 +301,16 @@ class GraphProgram:
     backend: str  # resolved: "shard_map" | "sequential"
     requested_backend: str
     problems: List[str]  # why shard_map was ineligible (empty when it runs)
+    # scan-over-layers form (compile_graph_forward(scan_layers=True)): the
+    # repeated block traces ONCE and runs under lax.scan over weights stacked
+    # on a leading layer axis; block_graph/tail_graph are the
+    # mapper.model_block_template pair and n_blocks the scan trip count.
+    # graph/placements still describe the full unrolled model (budget,
+    # reports, reference loop); only the traced program changes shape.
+    scan_layers: bool = False
+    block_graph: Optional[ForwardGraph] = None
+    tail_graph: Optional[ForwardGraph] = None
+    n_blocks: int = 0
     _fns: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
@@ -311,15 +333,29 @@ class GraphProgram:
 
     def weight_shapes(self) -> Dict[str, Tuple[int, ...]]:
         """Expected shape per weighted node: ``(K, N)`` for matmuls,
-        ``(d,)`` for norm scales."""
+        ``(d,)`` for norm scales. The scanned form instead keys the repeated
+        block's weights once under the ``block.`` prefix with a leading
+        ``n_blocks`` layer axis (``stack_block_weights`` builds that dict
+        from real ``init_transformer`` params)."""
         shapes: Dict[str, Tuple[int, ...]] = {}
+        if self.scan_layers:
+            L = self.n_blocks
+            for nd in self.block_graph.weighted_nodes():
+                shapes[nd.name] = (
+                    (L, nd.k, nd.n) if nd.op == "matmul" else (L, nd.d)
+                )
+            for nd in self.tail_graph.weighted_nodes():
+                shapes[nd.name] = (nd.k, nd.n) if nd.op == "matmul" else (nd.d,)
+            return shapes
         for nd in self.graph.weighted_nodes():
             shapes[nd.name] = (nd.k, nd.n) if nd.op == "matmul" else (nd.d,)
         return shapes
 
     def random_weights(self, key: jax.Array) -> Dict[str, jnp.ndarray]:
         """Standard-normal matmul weights and 0.1-scaled norm scales
-        (``fold_in(key, i)`` per weighted node) — for smokes and tests."""
+        (``fold_in(key, i)`` per weighted node) — for smokes and tests. The
+        scanned form stacks the SAME per-layer draws on the leading layer
+        axis, so one key yields corresponding weights in both forms."""
         out: Dict[str, jnp.ndarray] = {}
         for i, nd in enumerate(self.graph.weighted_nodes()):
             k = jax.random.fold_in(key, i)
@@ -327,6 +363,8 @@ class GraphProgram:
                 out[nd.name] = jax.random.normal(k, (nd.k, nd.n))
             else:
                 out[nd.name] = 0.1 * jax.random.normal(k, (nd.d,))
+        if self.scan_layers:
+            return _stack_layer_weights(out, self.n_blocks)
         return out
 
     def example_input(self, key: jax.Array) -> jnp.ndarray:
@@ -356,7 +394,27 @@ class GraphProgram:
         mesh = make_chip_mesh(D, C, require_concrete=True)
         qmax = (1 << (cim.a_bits - 1)) - 1 if cim.a_signed else (1 << cim.a_bits) - 1
         lo = -qmax - 1 if cim.a_signed else 0
-        weighted = graph.weighted_nodes()
+        scan = self.scan_layers
+        if scan:
+            block, tail = self.block_graph, self.tail_graph
+            block_weighted = block.weighted_nodes()
+            tail_weighted = tail.weighted_nodes()
+            mm_per_block = len(block.matmul_nodes)
+            n_blocks = self.n_blocks
+        else:
+            weighted = graph.weighted_nodes()
+
+        def parse_params(nodes_weighted, args):
+            """flat args -> {name: (w_int, sw) | scale}; returns args used."""
+            params, i = {}, 0
+            for nd in nodes_weighted:
+                if nd.op == "matmul":
+                    params[nd.name] = (args[i], args[i + 1])  # (w_int, sw)
+                    i += 2
+                else:
+                    params[nd.name] = args[i]
+                    i += 1
+            return params, i
 
         # qmax is a TRACED operand for the same reason as fabric.program: a
         # literal divisor gets strength-reduced to a rounded reciprocal,
@@ -367,93 +425,130 @@ class GraphProgram:
         # FMA (optimization_barrier is stripped before fusion on CPU).
         # Multiplying each add-feeding node output by the runtime one_f
         # leaves only `fma(y, 1, residual) == round(y + residual)` — the
-        # eager reference's exact arithmetic.
+        # eager reference's exact arithmetic. Both guards survive the scan
+        # body unchanged: qmax_f/one_f stay traced operands closed over by
+        # the body, so XLA cannot specialize on them per iteration either.
         def chip_fn(x_blk, qmax_f, one_f, *flat):
-            params = {}
-            i = 0
-            for nd in weighted:
-                if nd.op == "matmul":
-                    params[nd.name] = (flat[i], flat[i + 1])  # (w_int, sw)
-                    i += 2
-                else:
-                    params[nd.name] = flat[i]
-                    i += 1
             key = flat[-1] if has_key else None
             di = jax.lax.axis_index("data")
             ci = jax.lax.axis_index("model")
             b_loc, s = x_blk.shape[0], x_blk.shape[1]
+
+            def run_nodes(nodes, vals, params, mm_idx0, conversions, comparisons):
+                """ONE interpreter for a node list — the unrolled program,
+                the scanned block body, and the out-of-scan tail all execute
+                through it, which is what keeps their semantics identical.
+                ``mm_idx0`` offsets the per-node noise keys so the scanned
+                body reproduces the unrolled program's global
+                ``fold_in(key, matmul_index)`` derivation exactly (it is a
+                traced ``layer * mm_per_block`` inside the scan)."""
+                qcache = {}  # input-node name -> (x_int 2d, scale): one
+                # re-quantization boundary per DISTINCT matmul input, so
+                # sibling branches share their producer's quantization
+                mm_idx = 0
+                for node in nodes:
+                    if node.op == "matmul":
+                        src = node.inputs[0]
+                        if src not in qcache:
+                            h = vals[src]
+                            absval = jnp.abs(h) if cim.a_signed else jnp.maximum(h, 0)
+                            absmax = jnp.max(absval)
+                            if collectives:
+                                # max of shard maxes IS the global max, exactly
+                                absmax = jax.lax.pmax(absmax, ("data", "model"))
+                            scale = jnp.where(absmax > 0, absmax / qmax_f, 1.0)
+                            x_int = jnp.clip(jnp.round(h / scale), lo, qmax)
+                            qcache[src] = (x_int.reshape(-1, x_int.shape[-1]), scale)
+                        x_int2, scale = qcache[src]
+                        w_blk, sw_blk = params[node.name]
+                        nkey = (
+                            jax.random.fold_in(key, mm_idx0 + mm_idx)
+                            if has_key else None
+                        )
+                        chip_key = _chip_noise_key(nkey, di * C + ci) if has_key else None
+                        y_int, st = column_tile_matmul(x_int2, w_blk, cim, cols, key=chip_key)
+                        conversions = conversions + st.conversions
+                        comparisons = comparisons + st.comparisons
+                        if node.combine == "scatter":
+                            if C > 1:
+                                if collectives:
+                                    # the combine that leaves chip ci holding its
+                                    # tile-aligned K-slice of the consumer
+                                    y_int = jax.lax.psum_scatter(
+                                        y_int, "model", scatter_dimension=1, tiled=True
+                                    )
+                                else:
+                                    nc = y_int.shape[1] // C
+                                    y_int = jax.lax.dynamic_slice_in_dim(
+                                        y_int, ci * nc, nc, axis=1
+                                    )
+                        else:  # psum: the router's full replicated output
+                            if collectives:
+                                y_int = jax.lax.psum(y_int, "model")
+                        y = y_int * scale * sw_blk * one_f  # one_f: no FMA across
+                        vals[node.name] = y.reshape(b_loc, s, -1)  # the CiM boundary
+                        mm_idx += 1
+                    elif node.op == "norm":
+                        h = vals[node.inputs[0]]
+                        sumsq = jnp.sum(h * h, axis=-1, keepdims=True)
+                        if collectives:
+                            sumsq = jax.lax.psum(sumsq, "model")
+                        vals[node.name] = _norm_apply(
+                            h, params[node.name], node.eps, node.d * one_f, sumsq
+                        )
+                    elif node.op == "attention":
+                        q, k_, v_ = (vals[nm] for nm in node.inputs)
+                        vals[node.name] = _attention_mix(
+                            q, k_, v_, node.n_heads // C, node.n_kv_heads // C,
+                            node.head_dim,
+                        )
+                    elif node.op == "silu_gate":
+                        vals[node.name] = _silu_gate(*(vals[nm] for nm in node.inputs))
+                    elif node.op == "residual":
+                        a, b = (vals[nm] for nm in node.inputs)
+                        vals[node.name] = a + b
+                    elif node.op == "moe_gate":
+                        expert, router = (vals[nm] for nm in node.inputs)
+                        # one_f: the gated product feeds a residual add — see above
+                        vals[node.name] = expert * _expert0_prob(router) * one_f
+                    else:  # pragma: no cover — taxonomy is closed in the mapper
+                        raise ValueError(f"unknown graph op {node.op!r}")
+                return vals, conversions, comparisons
+
             conversions = jnp.zeros((), jnp.int32)
             comparisons = jnp.zeros((), jnp.int32)
-            vals = {"x": x_blk}
-            qcache = {}  # input-node name -> (x_int 2d, scale): one
-            # re-quantization boundary per DISTINCT matmul input, so
-            # sibling branches share their producer's quantization
-            mm_idx = 0
-            for node in graph.nodes:
-                if node.op == "matmul":
-                    src = node.inputs[0]
-                    if src not in qcache:
-                        h = vals[src]
-                        absval = jnp.abs(h) if cim.a_signed else jnp.maximum(h, 0)
-                        absmax = jnp.max(absval)
-                        if collectives:
-                            # max of shard maxes IS the global max, exactly
-                            absmax = jax.lax.pmax(absmax, ("data", "model"))
-                        scale = jnp.where(absmax > 0, absmax / qmax_f, 1.0)
-                        x_int = jnp.clip(jnp.round(h / scale), lo, qmax)
-                        qcache[src] = (x_int.reshape(-1, x_int.shape[-1]), scale)
-                    x_int2, scale = qcache[src]
-                    w_blk, sw_blk = params[node.name]
-                    nkey = jax.random.fold_in(key, mm_idx) if has_key else None
-                    chip_key = _chip_noise_key(nkey, di * C + ci) if has_key else None
-                    y_int, st = column_tile_matmul(x_int2, w_blk, cim, cols, key=chip_key)
-                    conversions = conversions + st.conversions
-                    comparisons = comparisons + st.comparisons
-                    if node.combine == "scatter":
-                        if C > 1:
-                            if collectives:
-                                # the combine that leaves chip ci holding its
-                                # tile-aligned K-slice of the consumer
-                                y_int = jax.lax.psum_scatter(
-                                    y_int, "model", scatter_dimension=1, tiled=True
-                                )
-                            else:
-                                nc = y_int.shape[1] // C
-                                y_int = jax.lax.dynamic_slice_in_dim(
-                                    y_int, ci * nc, nc, axis=1
-                                )
-                    else:  # psum: the router's full replicated output
-                        if collectives:
-                            y_int = jax.lax.psum(y_int, "model")
-                    y = y_int * scale * sw_blk * one_f  # one_f: no FMA across
-                    vals[node.name] = y.reshape(b_loc, s, -1)  # the CiM boundary
-                    mm_idx += 1
-                elif node.op == "norm":
-                    h = vals[node.inputs[0]]
-                    sumsq = jnp.sum(h * h, axis=-1, keepdims=True)
-                    if collectives:
-                        sumsq = jax.lax.psum(sumsq, "model")
-                    vals[node.name] = _norm_apply(
-                        h, params[node.name], node.eps, node.d * one_f, sumsq
+            if scan:
+                stacked, used = parse_params(block_weighted, flat)
+                tail_params, _ = parse_params(tail_weighted, flat[used:])
+
+                def body(carry, xs):
+                    h, conv, comp = carry
+                    li, params_l = xs  # scan slices the leading layer axis
+                    vals, conv, comp = run_nodes(
+                        block.nodes, {"x": h}, params_l,
+                        li * mm_per_block, conv, comp,
                     )
-                elif node.op == "attention":
-                    q, k_, v_ = (vals[nm] for nm in node.inputs)
-                    vals[node.name] = _attention_mix(
-                        q, k_, v_, node.n_heads // C, node.n_kv_heads // C,
-                        node.head_dim,
-                    )
-                elif node.op == "silu_gate":
-                    vals[node.name] = _silu_gate(*(vals[nm] for nm in node.inputs))
-                elif node.op == "residual":
-                    a, b = (vals[nm] for nm in node.inputs)
-                    vals[node.name] = a + b
-                elif node.op == "moe_gate":
-                    expert, router = (vals[nm] for nm in node.inputs)
-                    # one_f: the gated product feeds a residual add — see above
-                    vals[node.name] = expert * _expert0_prob(router) * one_f
-                else:  # pragma: no cover — taxonomy is closed in the mapper
-                    raise ValueError(f"unknown graph op {node.op!r}")
-            out = vals[graph.output]
+                    # the carry stays the feature-sharded residual stream:
+                    # the block body never gathers, so iteration i+1 reads
+                    # exactly the K-slice layout iteration i produced
+                    return (vals[block.output], conv, comp), None
+
+                (h, conversions, comparisons), _ = jax.lax.scan(
+                    body,
+                    (x_blk, conversions, comparisons),
+                    (jnp.arange(n_blocks, dtype=jnp.int32), stacked),
+                )
+                vals, conversions, comparisons = run_nodes(
+                    tail.nodes, {"x": h}, tail_params,
+                    n_blocks * mm_per_block, conversions, comparisons,
+                )
+                out = vals[tail.output]
+            else:
+                params, _ = parse_params(weighted, flat)
+                vals, conversions, comparisons = run_nodes(
+                    graph.nodes, {"x": x_blk}, params, 0, conversions, comparisons
+                )
+                out = vals[graph.output]
             if C > 1:
                 if collectives:
                     out = jax.lax.all_gather(out, "model", axis=2, tiled=True)
@@ -465,7 +560,22 @@ class GraphProgram:
             return out, conversions, comparisons
 
         in_specs: List = [P("data", None, "model"), P(), P()]
-        for nd in weighted:
+        if scan:
+            # stacked block weights: leading layer axis unsharded, the rest
+            # sharded exactly like the unrolled per-layer specs
+            for nd in block_weighted:
+                if nd.op == "matmul":
+                    in_specs.append(P(None, "model", None))
+                    in_specs.append(
+                        P(None, None, "model") if nd.combine == "scatter"
+                        else P(None, None, None)
+                    )
+                else:
+                    in_specs.append(P(None, "model"))
+            tail_spec_nodes = tail_weighted
+        else:
+            tail_spec_nodes = weighted
+        for nd in tail_spec_nodes:
             if nd.op == "matmul":
                 in_specs.append(P("model", None))
                 in_specs.append(
@@ -511,7 +621,30 @@ class GraphProgram:
             else (1 << self.cim.a_bits) - 1
         )
         flat = [jnp.float32(qmax), jnp.float32(1.0)]
-        for nd in self.graph.weighted_nodes():
+        if self.scan_layers:
+            for nd in self.block_graph.weighted_nodes():
+                w = weights[nd.name]
+                if nd.op == "matmul":
+                    # per-layer host-side quantization in a Python loop, NOT
+                    # a vmap: each w[i] goes through the EXACT same
+                    # quantize_symmetric call the unrolled program makes, so
+                    # the scan body's sliced (w_int, sw) are bit-identical
+                    per = [
+                        quantize_symmetric(
+                            w[i], self.cim.w_bits, self.cim.w_signed, per_axis=-1
+                        )
+                        for i in range(self.n_blocks)
+                    ]
+                    flat += [
+                        jnp.stack([p[0] for p in per]),
+                        jnp.stack([p[1] for p in per]),
+                    ]
+                else:
+                    flat.append(jnp.asarray(w, jnp.float32))
+            spec_nodes = self.tail_graph.weighted_nodes()
+        else:
+            spec_nodes = self.graph.weighted_nodes()
+        for nd in spec_nodes:
             if nd.op == "matmul":
                 w_int, sw = quantize_symmetric(
                     weights[nd.name], self.cim.w_bits, self.cim.w_signed, per_axis=-1
@@ -522,6 +655,14 @@ class GraphProgram:
         if key is not None:
             flat.append(key)
         return flat
+
+    def _unrolled_weights(self, weights):
+        """The per-layer weight dict the reference loop wants — stacked
+        ``block.`` weights unstacked back to ``layer{i}.`` keys when this is
+        a scanned program, passthrough otherwise."""
+        if self.scan_layers:
+            return unstack_block_weights(weights, self.n_blocks)
+        return weights
 
     def _fused_args(self, x, weights, key):
         """The fused callable's concrete argument tuple (measure_forward)."""
@@ -541,7 +682,8 @@ class GraphProgram:
             _record_request_fallback("fabric.graph", self)
             _record_request("fabric.graph", self, 0, fused=False)
             return per_node_forward(
-                x, weights, self.graph, self.placements, self.chip_mesh, self.cim,
+                x, self._unrolled_weights(weights), self.graph, self.placements,
+                self.chip_mesh, self.cim,
                 key=key, backend="sequential", return_stats=return_stats,
             )
         flat = self._prepare(x, weights, key)
@@ -559,7 +701,8 @@ class GraphProgram:
             )
             _record_request("fabric.graph", self, 0, fused=False)
             return per_node_forward(
-                x, weights, self.graph, self.placements, self.chip_mesh, self.cim,
+                x, self._unrolled_weights(weights), self.graph, self.placements,
+                self.chip_mesh, self.cim,
                 key=key, backend="sequential", return_stats=return_stats,
             )
         _record_request("fabric.graph", self, x.shape[0] * x.shape[1], fused=True)
@@ -576,9 +719,12 @@ class GraphProgram:
     def reference_forward(self, x, weights, key=None, backend: str = "sequential",
                           return_stats: bool = False):
         """The per-node reference loop on this program's placements — what
-        ``measure_forward`` times as the unfused baseline."""
+        ``measure_forward`` times as the unfused baseline. Accepts this
+        program's own weight dict, stacked or not (scanned weights are
+        unstacked back to ``layer{i}.`` keys first)."""
         return per_node_forward(
-            x, weights, self.graph, self.placements, self.chip_mesh, self.cim,
+            x, self._unrolled_weights(weights), self.graph, self.placements,
+            self.chip_mesh, self.cim,
             key=key, backend=backend, return_stats=return_stats,
         )
 
@@ -588,7 +734,14 @@ class GraphProgram:
         """Count collective primitives in the fused jaxpr — asserted equal
         to ``graph.collective_budget(model)``: per-sibling scatters are
         enumerated, ONE trailing all-gather, one pmax per re-quantization
-        boundary, one psum per norm/router plus the two stats totals."""
+        boundary, one psum per norm/router plus the two stats totals.
+
+        The scanned form counts identically: the jaxpr walk multiplies
+        collectives inside a ``scan`` body by its trip count, so one traced
+        block reports per-block census × ``n_blocks`` — the same link
+        traffic the unrolled program enumerates eqn by eqn. Tracing is
+        ``jax.make_jaxpr`` only (no XLA compile), so this is cheap at any
+        depth."""
         from repro.fabric.program import _count_collectives
 
         if self.backend != "shard_map":
@@ -617,6 +770,7 @@ def compile_graph_forward(
     tokens: int = 1,
     block_only: bool = False,
     placements: Optional[Sequence[ShardedPlacement]] = None,
+    scan_layers: bool = False,
 ) -> GraphProgram:
     """Compile a complete transformer-block stack into one fused shard_map
     forward over the chip mesh.
@@ -629,6 +783,18 @@ def compile_graph_forward(
     fused program is ineligible (:func:`graph_eligibility`), ``"auto"``
     falls back to the per-node loop — and fuses even on a 1x1 mesh, where
     killing the per-node Python dispatch is the point.
+
+    ``scan_layers=True`` compiles the repeated transformer block ONCE and
+    runs it under ``jax.lax.scan`` over weights stacked on a leading layer
+    axis (``stack_block_weights`` builds that dict from real params;
+    :meth:`GraphProgram.random_weights` stacks its own draws). Trace and
+    compile cost become depth-constant while the logits stay bit-for-bit
+    equal to the unrolled program on a 1x1 mesh, noisy ADC included — the
+    per-layer noise keys are ``fold_in``-derived from a traced global
+    matmul index inside the body, and the traced-qmax/traced-1.0 guards
+    are closed over by the scan body unchanged. Requires a ``ModelConfig``
+    (the block template comes from ``mapper.model_block_template``) and
+    the full model (``block_only=False``).
 
     Example::
 
@@ -648,6 +814,17 @@ def compile_graph_forward(
     """
     if backend not in ("auto", "sequential", "shard_map"):
         raise ValueError(f"unknown backend {backend!r}")
+    if scan_layers:
+        if not isinstance(model, ModelConfig):
+            raise ValueError(
+                "scan_layers needs a ModelConfig: the repeated-block template "
+                "comes from mapper.model_block_template, not an ad-hoc graph"
+            )
+        if block_only:
+            raise ValueError(
+                "scan_layers compiles the FULL model (the scan runs the "
+                "block n_layers times); drop block_only"
+            )
     if cim is None:
         cim = CiMConfig(
             mode="bitplane", adc_bits=chip_mesh.fabric.adc_bits,
@@ -682,6 +859,11 @@ def compile_graph_forward(
         resolved = "sequential"
     else:
         resolved = "shard_map"
+    block_graph = tail_graph = None
+    n_blocks = 0
+    if scan_layers:
+        block_graph, tail_graph = model_block_template(model, tokens)
+        n_blocks = model.n_layers
     return GraphProgram(
         graph=graph,
         chip_mesh=chip_mesh,
@@ -690,6 +872,10 @@ def compile_graph_forward(
         backend=resolved,
         requested_backend=backend,
         problems=problems,
+        scan_layers=scan_layers,
+        block_graph=block_graph,
+        tail_graph=tail_graph,
+        n_blocks=n_blocks,
     )
 
 
@@ -703,12 +889,17 @@ def per_node_forward(
     key: Optional[jax.Array] = None,
     backend: str = "sequential",
     return_stats: bool = False,
+    key_fn=None,
 ):
     """The reference forward: one ``execute_sharded_matmul`` per matmul node
     plus the SAME shared mixing helpers as the fused program, with the
     program's per-node noise keys (``fold_in(key, matmul_index)``) — the
     loop the fused graph is bit-exact against on a 1x1 mesh, and the
     documented fallback for ragged batches.
+
+    ``key_fn(key, matmul_index) -> node_key`` overrides the default
+    derivation — the noise-key-independence tests use it to prove the
+    scanned program would diverge if layers shared keys.
 
     Example::
 
@@ -740,7 +931,12 @@ def per_node_forward(
     for node in graph.nodes:
         if node.op == "matmul":
             h = vals[node.inputs[0]]
-            nkey = jax.random.fold_in(key, mm_idx) if key is not None else None
+            if key is None:
+                nkey = None
+            elif key_fn is not None:
+                nkey = key_fn(key, mm_idx)
+            else:
+                nkey = jax.random.fold_in(key, mm_idx)
             y2, st = execute_sharded_matmul(
                 h.reshape(-1, h.shape[-1]), weights[node.name], chip_mesh, cim,
                 sharded=sp_by_name[node.name], key=nkey, return_stats=True,
@@ -835,4 +1031,111 @@ def transformer_graph_weights(
 
         out["ln_f"] = f32(params["ln_f"])
         out["unembed"] = f32(unembed_weight(params["embed"], cfg))
+    return out
+
+
+def stack_block_weights(params: dict, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Adapt real ``init_transformer`` parameters into the SCANNED graph
+    weight dict: the repeated block's weights keyed once under the
+    ``block.`` prefix with their native leading ``(n_layers, ...)`` axis —
+    ``init_transformer`` already stacks every per-layer parameter, so this
+    is a relabelling, not a copy — plus the out-of-scan tail (``ln_f``,
+    ``unembed``). Slicing layer ``i`` off any stacked entry reproduces
+    ``transformer_graph_weights``'s ``layer{i}.*`` entry exactly.
+
+    Same representability rules as :func:`transformer_graph_weights`:
+    pure matmuls only (``qkv_bias`` raises), dense or 1-activated-expert
+    MoE (``expert0``).
+
+    Example::
+
+        >>> import jax
+        >>> from repro.configs.base import ModelConfig
+        >>> from repro.models.transformer import init_transformer
+        >>> from repro.fabric.graph import stack_block_weights
+        >>> cfg = ModelConfig(name="toy", family="dense", n_layers=2, d_model=64,
+        ...                   vocab=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        ...                   d_ff=128, pad_vocab_multiple=16, param_dtype="float32")
+        >>> ws = stack_block_weights(init_transformer(jax.random.PRNGKey(0), cfg), cfg)
+        >>> ws["block.q_proj"].shape, ws["block.ln1"].shape, ws["unembed"].shape
+        ((2, 64, 64), (2, 64), (64, 64))
+    """
+    if cfg.qkv_bias:
+        raise ValueError("the fabric graph maps pure matmuls; qkv_bias is unsupported")
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"no transformer graph for family {cfg.family!r}")
+    from repro.models.layers import unembed_weight
+
+    f32 = lambda a: jnp.asarray(a, jnp.float32)  # noqa: E731
+    attn = params["attn"]
+    out: Dict[str, jnp.ndarray] = {
+        "block.ln1": f32(params["ln1"]),
+        "block.q_proj": f32(attn["wq"]),
+        "block.k_proj": f32(attn["wk"]),
+        "block.v_proj": f32(attn["wv"]),
+        "block.o_proj": f32(attn["wo"]),
+        "block.ln2": f32(params["ln2"]),
+    }
+    if cfg.n_experts:
+        moe = params["moe"]
+        out["block.router"] = f32(moe["router"])
+        out["block.expert0.gate_proj"] = f32(moe["w_gate"][:, 0])
+        out["block.expert0.up_proj"] = f32(moe["w_up"][:, 0])
+        out["block.expert0.down_proj"] = f32(moe["w_down"][:, 0])
+    else:
+        mlp = params["mlp"]
+        out["block.gate_proj"] = f32(mlp["w_gate"])
+        out["block.up_proj"] = f32(mlp["w_up"])
+        out["block.down_proj"] = f32(mlp["w_down"])
+    out["ln_f"] = f32(params["ln_f"])
+    out["unembed"] = f32(unembed_weight(params["embed"], cfg))
+    return out
+
+
+def unstack_block_weights(
+    weights: Dict[str, jnp.ndarray], n_layers: int
+) -> Dict[str, jnp.ndarray]:
+    """The inverse adapter: a scanned (``block.``-stacked) weight dict back
+    to the unrolled ``layer{i}.*`` form — each layer is a zero-copy slice
+    of the stacked array, so the per-node reference loop sees exactly the
+    weights the scan body would slice at iteration ``i``.
+
+    Example::
+
+        >>> import jax.numpy as jnp
+        >>> from repro.fabric.graph import unstack_block_weights
+        >>> ws = unstack_block_weights(
+        ...     {"block.ln1": jnp.zeros((2, 4)), "ln_f": jnp.ones(4)}, 2)
+        >>> sorted(ws)
+        ['layer0.ln1', 'layer1.ln1', 'ln_f']
+    """
+    out: Dict[str, jnp.ndarray] = {}
+    for name, w in weights.items():
+        if name.startswith("block."):
+            suffix = name[len("block."):]
+            for i in range(n_layers):
+                out[f"layer{i}.{suffix}"] = w[i]
+        else:
+            out[name] = w
+    return out
+
+
+def _stack_layer_weights(
+    weights: Dict[str, jnp.ndarray], n_layers: int
+) -> Dict[str, jnp.ndarray]:
+    """Stack an unrolled ``layer{i}.*`` weight dict onto the leading layer
+    axis under the ``block.`` prefix (random_weights' scanned form)."""
+    out: Dict[str, jnp.ndarray] = {}
+    done = set()
+    for name in weights:
+        if name.startswith("layer") and "." in name:
+            suffix = name.split(".", 1)[1]
+            if suffix in done:
+                continue
+            done.add(suffix)
+            out[f"block.{suffix}"] = jnp.stack(
+                [weights[f"layer{i}.{suffix}"] for i in range(n_layers)]
+            )
+        else:
+            out[name] = weights[name]
     return out

@@ -38,6 +38,7 @@ __all__ = [
     "GraphNode",
     "ForwardGraph",
     "model_forward_graph",
+    "model_block_template",
 ]
 
 
@@ -437,6 +438,19 @@ class ForwardGraph:
             "all_to_all": 0,
         }
 
+    def block_census(self, model_axis: int) -> dict:
+        """The per-iteration collective census when THIS graph is the body
+        of a scan-over-layers program (``compile_graph_forward`` with
+        ``scan_layers=True``): like :meth:`collective_budget` but with no
+        trailing all-gather and no stats-total psums — those happen once
+        after the scan, not once per block. The scanned program's census
+        must equal ``block_census x n_layers`` plus the tail graph's
+        ``collective_budget`` — which is, by construction, exactly the
+        unrolled full graph's ``collective_budget``.
+        """
+        b = self.collective_budget(model_axis)
+        return {**b, "all_gather": 0, "psum": b["psum"] - 2}
+
 
 def model_forward_graph(
     cfg: ModelConfig, tokens: int, block_only: bool = False
@@ -525,6 +539,41 @@ def model_forward_graph(
         resid = norm("ln_f", resid)
         resid = mm("unembed", resid, d, cfg.padded_vocab)
     return ForwardGraph(nodes=tuple(nodes), m=tokens, d_in=d, output=resid)
+
+
+def model_block_template(
+    cfg: ModelConfig, tokens: int
+) -> Tuple[ForwardGraph, ForwardGraph]:
+    """The block-template form of :func:`model_forward_graph`: ``(block,
+    tail)`` where ``block`` is ONE repeated transformer block (the
+    ``block.``-prefixed graph of ``block_only=True``, residual stream in,
+    residual stream out) and ``tail`` holds the non-repeated nodes after the
+    block stack — the final norm and the unembedding, reading the scanned
+    carry as their graph input ``"x"``.
+
+    This is the workload ``compile_graph_forward(scan_layers=True)``
+    compiles: the block body traces ONCE and runs under ``jax.lax.scan``
+    over weights stacked on a leading layer axis
+    (``graph.stack_block_weights``), so trace/compile cost is
+    depth-constant. No node precedes the first block (embeddings enter the
+    graph directly as ``"x"``), so the tail is the only out-of-scan part.
+
+    Example::
+
+        >>> from repro.configs.registry import get_config
+        >>> from repro.fabric import model_block_template
+        >>> block, tail = model_block_template(get_config("smollm-135m"), 4)
+        >>> block.output, [nd.name for nd in tail.nodes]
+        ('block.mlp_res', ['ln_f', 'unembed'])
+    """
+    block = model_forward_graph(cfg, tokens, block_only=True)
+    d = cfg.d_model
+    tail_nodes = (
+        GraphNode("ln_f", "norm", ("x",), d=d, eps=cfg.norm_eps),
+        GraphNode("unembed", "matmul", ("ln_f",), k=d, n=cfg.padded_vocab),
+    )
+    tail = ForwardGraph(nodes=tail_nodes, m=tokens, d_in=d, output="unembed")
+    return block, tail
 
 
 def map_model(

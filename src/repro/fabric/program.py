@@ -130,19 +130,25 @@ _COLLECTIVE_PRIMS = ("all_gather", "reduce_scatter", "psum", "pmax", "ppermute",
 def _count_collectives(fn, args) -> dict:
     """Count collective primitives in ``fn``'s jaxpr (recursing into nested
     jaxprs) — shared by the chain program's and the graph program's
-    collective census."""
+    collective census. A ``lax.scan`` body executes once per iteration, so
+    the walk multiplies everything inside it by the scan's trip count: a
+    scan-over-layers program therefore reports its per-block census x
+    ``n_layers``, directly comparable to the unrolled program's budget."""
     jaxpr = jax.make_jaxpr(fn)(*args)
     counts = {name: 0 for name in _COLLECTIVE_PRIMS}
 
-    def walk(j):
+    def walk(j, mult=1):
         for eqn in j.eqns:
             if eqn.primitive.name in counts:
-                counts[eqn.primitive.name] += 1
+                counts[eqn.primitive.name] += mult
+            inner_mult = mult
+            if eqn.primitive.name == "scan":
+                inner_mult = mult * eqn.params.get("length", 1)
             for v in eqn.params.values():
                 for item in v if isinstance(v, (list, tuple)) else [v]:
                     inner = getattr(item, "jaxpr", item)
                     if hasattr(inner, "eqns"):
-                        walk(inner)
+                        walk(inner, inner_mult)
 
     walk(jaxpr.jaxpr)
     return counts

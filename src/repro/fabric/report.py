@@ -35,11 +35,18 @@ from repro.fabric.topology import EMA_PJ_PER_BIT, ChipMeshConfig, FabricConfig
 __all__ = ["fabric_report", "sharded_fabric_report", "graph_section", "render_markdown"]
 
 
-def graph_section(graph, model_axis: int) -> dict:
+def graph_section(graph, model_axis: int, program=None) -> dict:
     """The report's ``graph`` section for a ``ForwardGraph``: node-op
     census, the sibling branches the chain rollup undercounted, and the
     documented collective budget. ONE schema, shared by
     ``sharded_fabric_report(..., graph=...)`` and the serve rollup.
+
+    ``program`` (a ``fabric.graph.GraphProgram``) attaches a ``scan``
+    subsection when it was compiled with ``scan_layers=True``: the scan
+    trip count, the per-block collective census and the out-of-scan tail's
+    budget — ``census × n_blocks + tail`` sums to the section's
+    ``collective_budget`` (the link traffic is identical; only trace and
+    compile cost change).
 
     Example::
 
@@ -53,13 +60,20 @@ def graph_section(graph, model_axis: int) -> dict:
     ops: dict = {}
     for nd in graph.nodes:
         ops[nd.op] = ops.get(nd.op, 0) + 1
-    return {
+    sec = {
         "n_nodes": len(graph.nodes),
         "ops": ops,
         "n_matmuls": len(graph.matmul_nodes),
         "siblings": graph.sibling_names(),
         "collective_budget": graph.collective_budget(model_axis),
     }
+    if program is not None and getattr(program, "scan_layers", False):
+        sec["scan"] = {
+            "n_blocks": program.n_blocks,
+            "block_census": program.block_graph.block_census(model_axis),
+            "tail_budget": program.tail_graph.collective_budget(model_axis),
+        }
+    return sec
 
 
 def _layer_row(
@@ -164,6 +178,7 @@ def sharded_fabric_report(
     n_conversions: int = 96,
     measured: Optional[dict] = None,
     graph=None,
+    program=None,
 ) -> dict:
     """Mesh-level rollup of :class:`~repro.fabric.shard.ShardedPlacement`s.
 
@@ -185,7 +200,10 @@ def sharded_fabric_report(
     branches the old chain rollup undercounted, and the documented
     collective budget. Passing the graph's placements here is what makes
     the totals include the k/v/up/router siblings' conversions, EMA, and
-    link traffic.
+    link traffic. ``program`` additionally threads a scanned
+    ``GraphProgram``'s per-block census into the section
+    (:func:`graph_section`); the budget totals are identical scan or
+    unroll — the scan changes compile cost, not link traffic.
 
     Example::
 
@@ -270,7 +288,7 @@ def sharded_fabric_report(
     if measured is not None:
         report["program_validation"] = measured
     if graph is not None:
-        report["graph"] = graph_section(graph, chip_mesh.model)
+        report["graph"] = graph_section(graph, chip_mesh.model, program=program)
     return report
 
 
@@ -370,7 +388,13 @@ def render_markdown(report: dict, max_layers: Optional[int] = 24) -> str:
             + " costed — the chain rollup skipped them; collective budget "
             f"{budget['reduce_scatter']} reduce-scatter + "
             f"{budget['all_gather']} all-gather, {budget['pmax']} "
-            f"re-quantization boundaries",
+            f"re-quantization boundaries"
+            + (
+                f"; scanned: block traced once, {g['scan']['n_blocks']} "
+                "lax.scan iterations (census × n_blocks + tail == budget)"
+                if "scan" in g
+                else ""
+            ),
         ]
     if "program_validation" in report:
         pv = report["program_validation"]

@@ -250,6 +250,15 @@ def main():
         "pass and report measured-vs-modeled link latency",
     )
     ap.add_argument(
+        "--fabric-scan",
+        action="store_true",
+        help="compile the --fabric-program graph validation pass with "
+        "scan_layers=True (repro.fabric.compile_graph_forward): the FULL "
+        "model's repeated block traces once and runs under lax.scan — "
+        "depth-constant compile time for deep registry configs "
+        "(dense/moe families only)",
+    )
+    ap.add_argument(
         "--obs-log",
         default=None,
         metavar="PATH",
@@ -304,6 +313,13 @@ def _serve_main(args, ap):
 
     if (args.fabric_chips > 1 or args.fabric_mesh or args.fabric_program) and not args.fabric:
         ap.error("--fabric-chips/--fabric-mesh/--fabric-program require --fabric")
+    if args.fabric_scan and not args.fabric_program:
+        ap.error("--fabric-scan requires --fabric-program")
+    if args.fabric_scan and cfg.family not in ("dense", "moe"):
+        ap.error(
+            f"--fabric-scan needs a matmul-graph family (dense/moe); "
+            f"{args.arch} is {cfg.family!r}"
+        )
     if args.fabric_mesh and args.fabric_chips > 1:
         ap.error("pass either --fabric-mesh or the --fabric-chips sugar, not both")
     rollup = None
@@ -391,16 +407,23 @@ def _serve_main(args, ap):
                 from repro.fabric import compile_graph_forward
                 from repro.fabric.report import graph_section
 
+                # --fabric-scan validates the FULL model (the scan is what
+                # makes its compile depth-constant); otherwise one block
                 prog = compile_graph_forward(
                     cfg, cm, cim=val_cim, backend=args.fabric_backend,
-                    tokens=st.batch, block_only=True,
+                    tokens=st.batch, block_only=not args.fabric_scan,
+                    scan_layers=args.fabric_scan,
                 )
                 xp = _jax.random.normal(
                     _jax.random.PRNGKey(2), (st.batch, 1, prog.d_in)
                 )
-                rollup["graph"] = graph_section(prog.graph, cm.model)
-                desc = (f"graph: {len(prog.graph.nodes)}-node block "
-                        f"({len(prog.placements)} matmuls)")
+                rollup["graph"] = graph_section(prog.graph, cm.model, program=prog)
+                if args.fabric_scan:
+                    desc = (f"graph: scanned {prog.n_blocks}-block model "
+                            f"({len(prog.placements)} matmuls, block traced once)")
+                else:
+                    desc = (f"graph: {len(prog.graph.nodes)}-node block "
+                            f"({len(prog.placements)} matmuls)")
                 ref_name = "per-node loop"
             else:
                 from repro.fabric import compile_forward

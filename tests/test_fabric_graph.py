@@ -3,7 +3,12 @@
 rollups (the chain undercount regression), real-``init_transformer``-weight
 bit-exactness of the fused program vs the per-node reference on 1x1 (noisy
 ADC included), multi-chip agreement, the collective census vs the documented
-budget, ragged-batch fallback, and per-node noise-key independence.
+budget, ragged-batch fallback, and per-node noise-key independence — plus
+the scan-over-layers depth/config matrix (``scan_layers=True``): scanned vs
+unrolled bit-exact on 1x1 across depths/families/tied-unembed (noisy ADC
+included), float-tolerant on the forced 2x2 mesh, census == per-block
+census × n_layers + tail at every depth, report totals unchanged scan vs
+unroll, and scan-body noise-key independence.
 ``tests/conftest.py`` forces 8 host devices."""
 
 import dataclasses
@@ -23,6 +28,7 @@ from repro.fabric import (
     execute_sharded_matmul,
     graph_eligibility,
     measure_forward,
+    model_block_template,
     model_forward_chain,
     model_forward_graph,
     model_matmuls,
@@ -31,7 +37,9 @@ from repro.fabric import (
     shard_forward_graph,
     shard_model,
     sharded_fabric_report,
+    stack_block_weights,
     transformer_graph_weights,
+    unstack_block_weights,
 )
 from repro.models.transformer import init_transformer
 
@@ -369,3 +377,244 @@ def test_serve_fabric_program_chain_fallback_for_mamba():
     y = prog(x, ws)
     y_ref = prog.reference_forward(x, ws, backend="sequential")
     assert (np.asarray(y) == np.asarray(y_ref)).all()
+
+
+# ---------------------------------------------------------------------------
+# scan-over-layers: depth/config equivalence matrix + census scaling +
+# noise-key independence + adapters (compile_graph_forward(scan_layers=True))
+# ---------------------------------------------------------------------------
+
+
+def _scan_cfg(family: str, n_layers: int, tied: bool) -> ModelConfig:
+    base = CFG if family == "dense" else MOE
+    return dataclasses.replace(
+        base, n_layers=n_layers, tie_embeddings=tied,
+        name=f"scan-{family}-{n_layers}-{int(tied)}",
+    )
+
+
+def _scan_pair(cfg, cm, cim):
+    """(unrolled, scanned) programs plus matched real-weight dicts."""
+    params = init_transformer(jax.random.PRNGKey(0), cfg)
+    un = compile_graph_forward(cfg, cm, cim, tokens=8)
+    sc = compile_graph_forward(cfg, cm, cim, tokens=8, scan_layers=True)
+    return un, sc, transformer_graph_weights(params, cfg), stack_block_weights(params, cfg)
+
+
+# one cell per matrix dimension at >= 2 depths (full cross product would be
+# pure compile time): depth sweep on dense-untied, tied at 2 (dense) and 2
+# (moe), moe at both its depths
+SCAN_MATRIX = [
+    ("dense", 1, False),
+    ("dense", 2, False),
+    ("dense", 2, True),
+    ("dense", 5, False),
+    ("moe", 1, False),
+    ("moe", 2, True),
+]
+
+
+@pytest.mark.parametrize("family,n_layers,tied", SCAN_MATRIX)
+def test_scan_matrix_bit_exact_1x1(family, n_layers, tied):
+    """Acceptance matrix: the scanned program's logits are bit-for-bit the
+    unrolled program's on a 1x1 mesh at every depth/family/tied combo, with
+    real init_transformer weights through both adapters."""
+    cfg = _scan_cfg(family, n_layers, tied)
+    cm = ChipMeshConfig(fabric=FB)
+    un, sc, wu, ws = _scan_pair(cfg, cm, CIM_BP)
+    assert un.backend == sc.backend == "shard_map"
+    assert sc.scan_layers and sc.n_blocks == n_layers
+    assert not un.scan_layers
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 64))
+    y_un, st_un = un(x, wu, return_stats=True)
+    y_sc, st_sc = sc(x, ws, return_stats=True)
+    assert y_sc.shape == (2, 4, cfg.padded_vocab)
+    assert (np.asarray(y_un) == np.asarray(y_sc)).all()
+    assert int(st_un.conversions) == int(st_sc.conversions)
+    assert int(st_un.comparisons) == int(st_sc.comparisons)
+
+
+@pytest.mark.parametrize("family,n_layers", [("dense", 2), ("moe", 1)])
+def test_scan_noisy_bit_exact_1x1(family, n_layers):
+    """Noisy-ADC acceptance: per-layer fold_in noise keys derived INSIDE the
+    scan body reproduce the unrolled program's draws bit-for-bit."""
+    cfg = _scan_cfg(family, n_layers, False)
+    cm = ChipMeshConfig(fabric=FB)
+    un, sc, wu, ws = _scan_pair(cfg, cm, NOISY)
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 64))
+    assert (np.asarray(un(x, wu, key=key)) == np.asarray(sc(x, ws, key=key))).all()
+
+
+@pytest.mark.parametrize(
+    "family,n_layers",
+    [("dense", 1), ("dense", 2), ("dense", 5), ("moe", 1), ("moe", 2)],
+)
+def test_scan_census_scaling(family, n_layers):
+    """Census-scaling regression at every matrix depth: scanned
+    collective_counts == per-block census × n_layers + tail == the unrolled
+    budget — the jaxpr walk multiplies by the scan trip count, so the k/v/
+    up/router reduce-scatters inside the body are never silently dropped.
+    Trace-only (make_jaxpr): cheap at any depth."""
+    cfg = _scan_cfg(family, n_layers, False)
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    sc = compile_graph_forward(cfg, cm, CIM_BP, tokens=8, scan_layers=True)
+    assert sc.backend == "shard_map"
+    counts = sc.collective_counts()
+    budget = sc.collective_budget()
+    blk = sc.block_graph.block_census(cm.model)
+    tail = sc.tail_graph.collective_budget(cm.model)
+    assert counts == budget
+    assert {k: blk[k] * n_layers + tail[k] for k in blk} == budget
+    # per-block scatter census: 7 dense (q/k/v/o/gate/up/down) — the router
+    # recombines via psum, so moe adds a psum, not a scatter
+    assert blk["reduce_scatter"] == 7
+    assert counts["reduce_scatter"] == 7 * n_layers + 1
+    assert counts["all_gather"] == 1
+
+
+@pytest.mark.parametrize("family,n_layers", [("dense", 2), ("moe", 1)])
+def test_scan_2x2_matches_unrolled(family, n_layers):
+    """Forced-device 2x2 mesh: scanned vs unrolled logits agree to float
+    tolerance (noisy ADC), with identical conversion/comparison stats."""
+    cfg = _scan_cfg(family, n_layers, False)
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    un, sc, wu, ws = _scan_pair(cfg, cm, NOISY)
+    assert un.backend == sc.backend == "shard_map"
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 64))
+    y_un, st_un = un(x, wu, key=key, return_stats=True)
+    y_sc, st_sc = sc(x, ws, key=key, return_stats=True)
+    np.testing.assert_allclose(np.asarray(y_un), np.asarray(y_sc),
+                               atol=1e-4, rtol=1e-5)
+    assert int(st_un.conversions) == int(st_sc.conversions)
+    assert int(st_un.comparisons) == int(st_sc.comparisons)
+
+
+def test_scan_report_totals_unchanged_and_scan_section():
+    """Sibling-inclusive report totals are IDENTICAL scan vs unroll (the
+    scan changes compile cost, not link traffic), and the scanned program
+    threads its per-block decomposition into the graph section."""
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    un = compile_graph_forward(CFG, cm, CIM_BP, tokens=8)
+    sc = compile_graph_forward(CFG, cm, CIM_BP, tokens=8, scan_layers=True)
+    rep_un = sharded_fabric_report(un.placements, cm, graph=un.graph, program=un)
+    rep_sc = sharded_fabric_report(sc.placements, cm, graph=sc.graph, program=sc)
+    assert rep_un["totals"] == rep_sc["totals"]
+    assert rep_un["graph"]["collective_budget"] == rep_sc["graph"]["collective_budget"]
+    assert "scan" not in rep_un["graph"]
+    scan_sec = rep_sc["graph"]["scan"]
+    assert scan_sec["n_blocks"] == CFG.n_layers
+    blk, tail = scan_sec["block_census"], scan_sec["tail_budget"]
+    assert {k: blk[k] * CFG.n_layers + tail[k] for k in blk} == (
+        rep_sc["graph"]["collective_budget"]
+    )
+    md = render_markdown(rep_sc)
+    assert "scanned: block traced once" in md
+    assert "scanned" not in render_markdown(rep_un)
+
+
+def test_scan_noise_keys_differ_across_iterations_and_match_unrolled():
+    """The scan body's per-layer ADC noise draws (1) match the unrolled
+    program's fold_in(key, global_matmul_index) derivation EXACTLY and
+    (2) genuinely differ across scan iterations — a reference run whose
+    key_fn reuses layer-0 keys for every layer diverges."""
+    cm = ChipMeshConfig(fabric=FB)
+    sc = compile_graph_forward(CFG, cm, NOISY, tokens=8, scan_layers=True)
+    params = init_transformer(jax.random.PRNGKey(0), CFG)
+    wu = transformer_graph_weights(params, CFG)
+    ws = stack_block_weights(params, CFG)
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 64))
+    y_sc = np.asarray(sc(x, ws, key=key))
+    # (1) exact match with the unrolled per-node derivation
+    y_ref = np.asarray(per_node_forward(
+        x, wu, sc.graph, sc.placements, cm, NOISY, key=key,
+    ))
+    assert (y_sc == y_ref).all()
+    # an explicit key_fn equal to the default is a no-op
+    y_same = np.asarray(per_node_forward(
+        x, wu, sc.graph, sc.placements, cm, NOISY, key=key,
+        key_fn=jax.random.fold_in,
+    ))
+    assert (y_same == y_ref).all()
+    # (2) collapsing every layer onto layer-0's keys changes the output:
+    # the scanned body's draws are NOT shared across iterations
+    mmb = len(sc.block_graph.matmul_nodes)
+    y_shared = np.asarray(per_node_forward(
+        x, wu, sc.graph, sc.placements, cm, NOISY, key=key,
+        key_fn=lambda k, i: jax.random.fold_in(k, i % mmb),
+    ))
+    assert not (y_shared == y_ref).all()
+
+
+def test_scan_ragged_batch_falls_back_with_stacked_weights():
+    """A ragged batch on a scanned program unstacks the block weights and
+    runs the per-node reference — bit-identical to the unrolled fallback."""
+    cm = ChipMeshConfig(data=2, model=2, fabric=FB)
+    sc = compile_graph_forward(CFG, cm, CIM_BP, tokens=8, scan_layers=True)
+    params = init_transformer(jax.random.PRNGKey(0), CFG)
+    wu = transformer_graph_weights(params, CFG)
+    ws = stack_block_weights(params, CFG)
+    x3 = jax.random.normal(jax.random.PRNGKey(2), (3, 4, 64))
+    y3 = sc(x3, ws)
+    y3_ref = per_node_forward(
+        x3, wu, sc.graph, sc.placements, cm, CIM_BP, backend="sequential",
+    )
+    assert (np.asarray(y3) == np.asarray(y3_ref)).all()
+    assert (np.asarray(sc.reference_forward(x3, ws)) == np.asarray(y3_ref)).all()
+
+
+def test_scan_weight_adapters_roundtrip_and_shapes():
+    """stack_block_weights slices == transformer_graph_weights entries;
+    unstack is its exact inverse; weight_shapes and random_weights stack
+    the per-layer form on the leading layer axis."""
+    for cfg in (CFG, dataclasses.replace(CFG, tie_embeddings=True),
+                dataclasses.replace(MOE, n_layers=2)):
+        params = init_transformer(jax.random.PRNGKey(0), cfg)
+        wu = transformer_graph_weights(params, cfg)
+        ws = stack_block_weights(params, cfg)
+        unrolled = unstack_block_weights(ws, cfg.n_layers)
+        assert set(unrolled) == set(wu)
+        for name in wu:
+            assert (np.asarray(unrolled[name]) == np.asarray(wu[name])).all(), name
+    cm = ChipMeshConfig(fabric=FB)
+    sc = compile_graph_forward(CFG, cm, CIM_BP, tokens=8, scan_layers=True)
+    un = compile_graph_forward(CFG, cm, CIM_BP, tokens=8)
+    shapes = sc.weight_shapes()
+    assert shapes["block.q_proj"] == (CFG.n_layers, 64, 64)
+    assert shapes["block.ln1"] == (CFG.n_layers, 64)
+    assert shapes["unembed"] == (64, CFG.padded_vocab)
+    ws = stack_block_weights(init_transformer(jax.random.PRNGKey(0), CFG), CFG)
+    assert {n: tuple(w.shape) for n, w in ws.items()} == shapes
+    # same key -> corresponding random draws in both forms
+    rs, ru = sc.random_weights(jax.random.PRNGKey(3)), un.random_weights(jax.random.PRNGKey(3))
+    for i in range(CFG.n_layers):
+        assert (np.asarray(rs["block.o_proj"][i])
+                == np.asarray(ru[f"layer{i}.o_proj"])).all()
+    # stacked-shape validation catches a per-layer-shaped weight
+    bad = dict(ws)
+    bad["block.q_proj"] = bad["block.q_proj"][0]
+    with pytest.raises(ValueError, match="expects weights"):
+        sc(jax.random.normal(jax.random.PRNGKey(1), (2, 4, 64)), bad)
+
+
+def test_scan_error_paths_and_block_template():
+    """scan_layers needs a ModelConfig and the full model; the block
+    template pairs the repeated block with the ln_f/unembed tail."""
+    cm = ChipMeshConfig(fabric=FB)
+    graph = model_forward_graph(CFG, 8)
+    with pytest.raises(ValueError, match="ModelConfig"):
+        compile_graph_forward(graph, cm, CIM_BP, scan_layers=True)
+    with pytest.raises(ValueError, match="block_only"):
+        compile_graph_forward(CFG, cm, CIM_BP, scan_layers=True, block_only=True)
+    block, tail = model_block_template(CFG, 8)
+    assert block.output == "block.mlp_res"
+    assert [nd.name for nd in tail.nodes] == ["ln_f", "unembed"]
+    assert tail.node("unembed").n == CFG.padded_vocab
+    # block census drops the trailing gather and the two stats psums that
+    # only the full program pays once
+    b = block.collective_budget(2)
+    c = block.block_census(2)
+    assert c["all_gather"] == 0 and c["psum"] == b["psum"] - 2
+    assert c["reduce_scatter"] == b["reduce_scatter"]

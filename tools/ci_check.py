@@ -11,7 +11,11 @@ measured/modeled link-latency ratio -> ``BENCH_fabric_program.json``) — the
 full-transformer-block fused GRAPH smoke (``repro.fabric.graph`` under
 forced 8 host devices: real ``init_transformer`` weights bit-exact vs the
 per-node reference on 1x1, collective census == documented budget ->
-``BENCH_fabric_graph.json``) — the observability smoke (``repro.obs``
+``BENCH_fabric_graph.json``) — the scan-over-layers gate
+(``compile_graph_forward(scan_layers=True)`` at n_layers=8: scanned
+trace+compile strictly below unrolled, bit-exact noisy logits, census ==
+per-block × n_layers + tail -> ``BENCH_fabric_scan.json``) — the
+observability smoke (``repro.obs``
 under forced 8 host devices: required metric names present, the fallback
 counter 0 on an aligned fused batch and exactly 1 ``ragged_batch`` on a
 ragged one, the JSONL trace log parse-clean, fused outputs bit-identical
@@ -27,10 +31,14 @@ symbol must be documented in ``docs/fabric.md``, and every ``repro.obs``
 public symbol in ``docs/observability.md``. Exits non-zero if any stage
 fails or a smoke benchmark blows its time budget.
 
+Tier-1 additionally enforces a passed-test-count floor
+(``TIER1_MIN_PASSED``) so suites cannot silently shrink.
+
   python tools/ci_check.py [--skip-tests] [--out BENCH_fabric.json]
                            [--shard-out BENCH_fabric_shard.json]
                            [--program-out BENCH_fabric_program.json]
                            [--graph-out BENCH_fabric_graph.json]
+                           [--scan-out BENCH_fabric_scan.json]
                            [--obs-out BENCH_obs.json]
 """
 
@@ -48,6 +56,9 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 SMOKE_BUDGET_S = 30.0
+# tier-1 test-count floor: suites can grow but cannot silently shrink (a
+# collection error or an importorskip'd-away file drops dozens at once)
+TIER1_MIN_PASSED = 260
 
 
 def run_tier1() -> bool:
@@ -56,9 +67,23 @@ def run_tier1() -> bool:
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
     )
     proc = subprocess.run(
-        [sys.executable, "-m", "pytest", "-x", "-q"], cwd=REPO, env=env
+        [sys.executable, "-m", "pytest", "-x", "-q"], cwd=REPO, env=env,
+        capture_output=True, text=True,
     )
-    return proc.returncode == 0
+    tail = proc.stdout.strip().splitlines()
+    if tail:
+        print(tail[-1])
+    if proc.returncode != 0:
+        print(proc.stdout[-4000:])
+        print(proc.stderr[-2000:])
+        return False
+    m = re.search(r"(\d+) passed", proc.stdout)
+    passed = int(m.group(1)) if m else 0
+    if passed < TIER1_MIN_PASSED:
+        print(f"[ci_check] FAIL: tier-1 passed only {passed} tests "
+              f"< the {TIER1_MIN_PASSED} floor — did a suite stop collecting?")
+        return False
+    return True
 
 
 def run_fabric_smoke(out: Path) -> bool:
@@ -289,6 +314,62 @@ def run_graph_smoke(out: Path) -> bool:
     return _check_calibration_stability("graph", payload)
 
 
+def run_scan_smoke(out: Path) -> bool:
+    """Scan-over-layers gate (``compile_graph_forward(scan_layers=True)``)
+    under forced 8 host devices: at the smoke depth (n_layers=8) the
+    scanned program's trace+compile wall-clock must be STRICTLY below the
+    unrolled program's, the two compiled executables must produce
+    bit-identical noisy-ADC logits on a 1x1 mesh, and the scanned
+    collective census must equal both the documented budget and the
+    per-block census × n_layers + tail decomposition. Recorded to
+    ``BENCH_fabric_scan.json`` (including ``compile_speedup``) for
+    cross-PR tracking.
+
+    Budgeted at 6x the smoke budget rather than 2x: the unrolled depth-8
+    compile IS the cost this PR eliminates, and the smoke pays it once on
+    purpose to document the ratio."""
+    t0 = time.perf_counter()
+    payload = _run_forced_device_smoke("--scan-smoke")
+    wall = time.perf_counter() - t0
+    payload["wall_s"] = wall
+    out.write_text(json.dumps(payload, indent=2, default=float))
+    if "error" in payload:
+        print(f"[ci_check] FAIL: scan smoke failed: {payload['error']}")
+        return False
+    un = payload.get("unrolled_compile_s")
+    sc = payload.get("scanned_compile_s")
+    print(
+        f"[ci_check] scan smoke: n_layers={payload.get('n_layers')}, "
+        f"compile unrolled {un:.1f}s vs scanned {sc:.1f}s "
+        f"({payload.get('compile_speedup', 0.0):.1f}x) in {wall:.1f}s -> {out}"
+    )
+    if wall > 6 * SMOKE_BUDGET_S:
+        print(f"[ci_check] FAIL: scan smoke took {wall:.1f}s > "
+              f"{6 * SMOKE_BUDGET_S}s budget")
+        return False
+    if not payload.get("bit_exact_1x1"):
+        print("[ci_check] FAIL: scanned graph forward is not bit-exact vs "
+              f"the unrolled program on a 1x1 mesh: "
+              f"maxdiff {payload.get('max_abs_diff_1x1')}")
+        return False
+    if payload.get("backend") != "shard_map":
+        print(f"[ci_check] FAIL: scanned graph did not resolve to shard_map "
+              f"under forced devices: {payload.get('backend')} "
+              f"({payload.get('problems')})")
+        return False
+    if not payload.get("budget_match"):
+        print(f"[ci_check] FAIL: scanned collective census != documented "
+              f"budget / per-block x n_layers: {payload.get('collectives')} "
+              f"vs {payload.get('collective_budget')} vs "
+              f"{payload.get('block_census_x_layers')}")
+        return False
+    if not (un and sc and sc < un):
+        print(f"[ci_check] FAIL: scanned trace+compile ({sc}s) is not below "
+              f"unrolled ({un}s) — the scan stopped paying for itself")
+        return False
+    return True
+
+
 def _check_calibration_stability(which: str, payload: dict) -> bool:
     """Gate the named ``link_clock_calibration`` constant on *stability across
     runs*, never magnitude: the ratio of measured host-simulation seconds to
@@ -475,6 +556,7 @@ def main():
     ap.add_argument("--shard-out", default=str(REPO / "BENCH_fabric_shard.json"))
     ap.add_argument("--program-out", default=str(REPO / "BENCH_fabric_program.json"))
     ap.add_argument("--graph-out", default=str(REPO / "BENCH_fabric_graph.json"))
+    ap.add_argument("--scan-out", default=str(REPO / "BENCH_fabric_scan.json"))
     ap.add_argument("--obs-out", default=str(REPO / "BENCH_obs.json"))
     args = ap.parse_args()
 
@@ -491,6 +573,8 @@ def main():
         ok = run_program_smoke(Path(args.program_out))
     if ok:
         ok = run_graph_smoke(Path(args.graph_out))
+    if ok:
+        ok = run_scan_smoke(Path(args.scan_out))
     if ok:
         ok = run_obs_smoke(Path(args.obs_out))
     if ok:
