@@ -16,12 +16,17 @@ real ``init_transformer`` weights against the per-node reference and checks
 the collective census against the documented budget; ``scan_smoke``
 compiles the SAME graph unrolled and scanned (``scan_layers=True``) at
 ``n_layers=8`` and records the compile-time speedup plus scanned-vs-unrolled
-bit-exactness; ``obs_smoke`` runs the
+bit-exactness; ``autotune_smoke`` serves a mixed-length ragged request
+trace through the bucketed fused-program cache (``repro.fabric.autotune``)
+— bit-exact after pad-slicing, measured speedup vs the per-node loop, and
+the autotuner's plan cost vs the default mesh; ``obs_smoke`` runs the
 fused chain under an active ``repro.obs`` registry + JSONL tracer and
 reports the canonical metric names, fallback-counter semantics, and
 obs-on/off bit-identity the CI observability gate checks. Doubles as the
-``fabric`` entry of ``benchmarks/run.py`` and the <30 s smoke benchmark of
-``tools/ci_check.py``.
+``fabric`` / ``fabric-autotune`` / ``fabric-smokes`` entries of
+``benchmarks/run.py`` (``fabric_bench`` / ``autotune_bench`` /
+``smoke_bench``, the latter two at 1x1 so they run without forced
+devices) and the <30 s smoke benchmark of ``tools/ci_check.py``.
 
   PYTHONPATH=src python -m benchmarks.fabric_sweep [--out BENCH_fabric.json]
   PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -32,6 +37,8 @@ obs-on/off bit-identity the CI observability gate checks. Doubles as the
       python -m benchmarks.fabric_sweep --graph-smoke
   PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m benchmarks.fabric_sweep --scan-smoke
+  PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m benchmarks.fabric_sweep --autotune-smoke
   PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m benchmarks.fabric_sweep --obs-smoke
 """
@@ -541,6 +548,107 @@ def obs_smoke(mesh=(2, 2)) -> dict:
     return out
 
 
+def autotune_smoke(mesh=(2, 2)) -> dict:
+    """Continuous-batching smoke (``repro.fabric.autotune``): serve a
+    mixed-length ragged request trace through the bucketed fused-program
+    cache and check (a) the padded fused result is bit-exact to the
+    unpadded per-node reference after slicing (noiseless AND noisy ADC —
+    per-row noise keys make pad rows draw-invisible), (b) the measured
+    trace wall-clock beats the per-node fallback loop, (c) the autotuner's
+    cost-model plan is never costlier than the default mesh with one
+    max-batch bucket. Meant for forced host devices
+    (``python -m benchmarks.fabric_sweep --autotune-smoke`` inside
+    ``tools/ci_check.py``'s 8-device subprocess ->
+    ``BENCH_fabric_autotune.json``).
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import ModelConfig
+    from repro.core.cim_linear import CiMConfig
+    from repro.fabric import (
+        BucketedGraphCache,
+        ChipMeshConfig,
+        FabricConfig,
+        autotune_plan,
+        autotune_section,
+        request_histogram,
+        transformer_graph_weights,
+    )
+    from repro.models.transformer import init_transformer
+
+    # the graph-smoke config: 2x2-eligible (K tile-aligned, GQA heads 4/2)
+    cfg = ModelConfig(
+        name="autotune-smoke", family="dense", n_layers=1, d_model=64,
+        vocab=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        pad_vocab_multiple=16, param_dtype="float32", compute_dtype="float32",
+    )
+    fb = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+    cim = CiMConfig(
+        mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False
+    )
+    noisy = dataclasses.replace(cim, comparator_sigma=0.05)
+    params = init_transformer(jax.random.PRNGKey(0), cfg)
+    ws = transformer_graph_weights(params, cfg)
+    cm = ChipMeshConfig(data=mesh[0], model=mesh[1], fabric=fb)
+    seq = 4
+    out = {"devices": len(jax.devices()), "mesh": f"{mesh[0]}x{mesh[1]}"}
+
+    # ragged batch on the bucketed fused path: B=3 pads to the 4-bucket
+    cache = BucketedGraphCache(cfg, cm, cim, buckets=(4,), seq=seq)
+    xs = {
+        b: jax.random.normal(jax.random.PRNGKey(b), (b, seq, cfg.d_model))
+        for b in (1, 2, 3)
+    }
+    prog = cache.program_for(4)
+    out["backend"] = prog.backend
+    y = np.asarray(cache(xs[3], ws))
+    y_ref = np.asarray(prog.reference_forward(xs[3], ws))
+    out["bit_exact_ragged"] = bool((y == y_ref).all())
+
+    # noisy ADC: pad rows must not consume noise-key draws
+    nk = jax.random.PRNGKey(7)
+    cache_n = BucketedGraphCache(cfg, cm, noisy, buckets=(4,), seq=seq)
+    yn = np.asarray(cache_n(xs[3], ws, key=nk))
+    yn_ref = np.asarray(
+        cache_n.program_for(4, noisy=True).reference_forward(xs[3], ws, key=nk)
+    )
+    out["bit_exact_ragged_noisy"] = bool((yn == yn_ref).all())
+
+    # mixed-length trace: bucketed fused serving vs the per-node fallback
+    # loop every ragged batch used to take (warm both paths first)
+    trace = [3, 1, 2, 3]
+    for b in set(trace):
+        jax.block_until_ready(cache(xs[b], ws))
+        jax.block_until_ready(prog.reference_forward(xs[b], ws))
+    t0 = time.perf_counter()
+    for b in trace:
+        jax.block_until_ready(cache(xs[b], ws))
+    out["fused_trace_s"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for b in trace:
+        jax.block_until_ready(prog.reference_forward(xs[b], ws))
+    out["pernode_trace_s"] = time.perf_counter() - t0
+    out["ragged_mix_speedup"] = out["pernode_trace_s"] / max(
+        out["fused_trace_s"], 1e-9
+    )
+    out["cache"] = cache.stats()
+
+    # the autotuner's plan must never cost more than the default mesh with
+    # a single max-batch bucket (the baseline is in its search space)
+    plan = autotune_plan(
+        cfg, request_histogram(trace), cm.n_chips, fb, seq=seq, cim=cim,
+        default_mesh=mesh,
+    )
+    out["plan"] = autotune_section(plan)
+    out["plan_cost_le_default"] = (
+        plan.expected_latency_s <= plan.baseline_latency_s
+    )
+    return out
+
+
 def fabric_mapping_smoke() -> dict:
     """Map a smollm block on a hybrid fabric — the perf-trajectory anchor."""
     from repro.configs.registry import get_config
@@ -601,6 +709,55 @@ def fabric_bench() -> list[tuple]:
     return rows
 
 
+def autotune_bench() -> list[tuple]:
+    """benchmarks/run.py rows for the continuous-batching autotune smoke.
+
+    Runs at 1x1 so it works without forced host devices; the 8-device
+    gated version lives in ``tools/ci_check.py`` (``run_autotune_smoke``
+    -> ``BENCH_fabric_autotune.json``).
+    """
+    s = autotune_smoke(mesh=(1, 1))
+    return [
+        (
+            "fabric-autotune/ragged_trace_1x1",
+            s["fused_trace_s"] * 1e6,
+            f"speedup={s['ragged_mix_speedup']:.1f};"
+            f"bit_exact={int(s['bit_exact_ragged'] and s['bit_exact_ragged_noisy'])};"
+            f"plan={s['plan']['mesh']}/{'-'.join(map(str, s['plan']['buckets']))};"
+            f"hits={s['cache']['hits']}",
+        )
+    ]
+
+
+def _smoke_row(name: str, out: dict, wall_s: float) -> tuple:
+    """Summarise a smoke dict as a CSV row: first few scalar metrics."""
+    keys = [
+        k for k, v in out.items()
+        if isinstance(v, (int, float)) and not isinstance(v, bool)
+    ][:3]
+    derived = ";".join(f"{k}={out[k]:.4g}" for k in keys) or "ok"
+    return (f"fabric-smokes/{name}", wall_s * 1e6, derived)
+
+
+def smoke_bench() -> list[tuple]:
+    """benchmarks/run.py rows mirroring every other ``BENCH_*.json`` device
+    smoke of ``tools/ci_check.py``, run at 1x1 so they work without forced
+    host devices. Keeps each CI trajectory file discoverable from the bench
+    harness (``benchmarks/run.py`` asserts the mapping is total)."""
+    rows = []
+    for name, thunk in (
+        ("shard", lambda: shard_backend_smoke(meshes=((1, 1),))),
+        ("program", lambda: program_smoke(mesh=(1, 1))),
+        ("graph", lambda: graph_smoke(mesh=(1, 1))),
+        ("scan", lambda: scan_smoke(mesh=(1, 1))),
+        ("obs", lambda: obs_smoke(mesh=(1, 1))),
+    ):
+        t0 = time.perf_counter()
+        out = thunk()
+        rows.append(_smoke_row(name, out, time.perf_counter() - t0))
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_fabric.json")
@@ -634,6 +791,15 @@ def main():
         "(tools/ci_check.py runs this in a forced-8-device subprocess)",
     )
     ap.add_argument(
+        "--autotune-smoke",
+        action="store_true",
+        help="print the autotune_smoke() JSON (ragged mixed-length trace "
+        "through the bucketed fused-program cache: bit-exact after "
+        "pad-slicing, measured speedup vs the per-node loop, autotuner "
+        "plan cost vs the default mesh) to stdout and exit "
+        "(tools/ci_check.py runs this in a forced-8-device subprocess)",
+    )
+    ap.add_argument(
         "--obs-smoke",
         action="store_true",
         help="print the obs_smoke() JSON (repro.obs metric names, fallback "
@@ -653,6 +819,9 @@ def main():
         return
     if args.scan_smoke:
         print(json.dumps(scan_smoke(), indent=2, default=float))
+        return
+    if args.autotune_smoke:
+        print(json.dumps(autotune_smoke(), indent=2, default=float))
         return
     if args.obs_smoke:
         print(json.dumps(obs_smoke(), indent=2, default=float))

@@ -2,18 +2,59 @@
 
 Prints ``name,us_per_call,derived`` CSV. Usage:
   PYTHONPATH=src python -m benchmarks.run [--only fig4,table1] [--skip-slow]
+
+Every ``BENCH_*.json`` trajectory file written by ``tools/ci_check.py`` must
+map to a bench entry here (``BENCH_TRAJECTORIES``) — ``main`` asserts the
+mapping is total so new CI smokes stay discoverable from the bench harness.
 """
 
 from __future__ import annotations
 
 import argparse
+import re
 import sys
+from pathlib import Path
+
+# BENCH_*.json writer in tools/ci_check.py -> the bench entry that exercises
+# the same code path from this harness (single-device where CI forces 8).
+BENCH_TRAJECTORIES = {
+    "BENCH_fabric.json": "fabric",
+    "BENCH_fabric_shard.json": "fabric-smokes",
+    "BENCH_fabric_program.json": "fabric-smokes",
+    "BENCH_fabric_graph.json": "fabric-smokes",
+    "BENCH_fabric_scan.json": "fabric-smokes",
+    "BENCH_obs.json": "fabric-smokes",
+    "BENCH_fabric_autotune.json": "fabric-autotune",
+}
+
+# benches slow enough to skip under --skip-slow (MNIST training + the
+# compile-heavy CI smoke mirrors)
+SLOW_BENCHES = ("fig7cd", "fabric-smokes")
+
+
+def check_bench_coverage(bench_names) -> None:
+    """Every BENCH_*.json mentioned in tools/ci_check.py must map (via
+    BENCH_TRAJECTORIES) to an existing bench entry."""
+    src = (Path(__file__).resolve().parents[1] / "tools" / "ci_check.py").read_text()
+    writers = sorted(set(re.findall(r"BENCH_[A-Za-z0-9_]+\.json", src)))
+    missing = [
+        w for w in writers if BENCH_TRAJECTORIES.get(w) not in bench_names
+    ]
+    if missing:
+        raise SystemExit(
+            "BENCH writers in tools/ci_check.py without a matching "
+            f"benchmarks entry: {missing} (update BENCH_TRAJECTORIES and the "
+            "benches list in benchmarks/run.py)"
+        )
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated bench name filter")
-    ap.add_argument("--skip-slow", action="store_true", help="skip MNIST training bench")
+    ap.add_argument(
+        "--skip-slow", action="store_true",
+        help=f"skip the slow benches: {', '.join(SLOW_BENCHES)}",
+    )
     args = ap.parse_args()
 
     from benchmarks import fabric_sweep, framework, paper_figs
@@ -24,14 +65,18 @@ def main() -> None:
         ("fig6", paper_figs.fig6_nonlinearity),
         ("fig7ab", paper_figs.fig7_design_space),
         ("fig3", paper_figs.fig3_hybrid_schedule),
+        ("fig7cd", paper_figs.fig7_mnist),
         ("fabric", fabric_sweep.fabric_bench),
+        ("fabric-autotune", fabric_sweep.autotune_bench),
+        ("fabric-smokes", fabric_sweep.smoke_bench),
         ("kernels", framework.bench_cim_kernels),
         ("train", framework.bench_train_step),
         ("serve", framework.bench_serve),
         ("dryrun", framework.bench_dryrun_summary),
     ]
-    if not args.skip_slow:
-        benches.insert(5, ("fig7cd", paper_figs.fig7_mnist))
+    check_bench_coverage({name for name, _ in benches})
+    if args.skip_slow:
+        benches = [(n, f) for n, f in benches if n not in SLOW_BENCHES]
 
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -33,7 +33,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import search_tree as st
-from repro.core.adc import ADCConfig, ADCResult, convert, dequantize
+from repro.core.adc import (
+    ADCConfig,
+    ADCResult,
+    convert,
+    dequantize,
+    make_reference_ladder,
+)
 from repro.core.cim_array import bit_planes, plane_weights
 from repro.core.mav_stats import analytic_code_pmf
 
@@ -112,8 +118,16 @@ def _pad_reduction(x_int, w_int, rows):
     return x_int, w_int, (k + pad) // rows
 
 
-def _bitplane_matmul(x_int, w_int, cfg: CiMConfig, key):
+def _bitplane_matmul(x_int, w_int, cfg: CiMConfig, key, row_offset=0):
     """x_int (M,K) @ w_int (K,N) through per-plane CiM arrays + in-memory ADC.
+
+    ``row_offset`` is the global index of ``x_int``'s first row. With a key,
+    comparator noise is drawn PER ROW from ``fold_in(cmp_key, row_offset+i)``
+    (the mismatch ladder stays shared — the reference DAC is one physical
+    array), so a row's draws depend only on its global row index: never on
+    the total batch shape, and never on which data shard executes it. That
+    row-shape invariance is what lets a zero-padded bucketed batch
+    (``fabric.autotune``) stay bit-exact to the unpadded run row by row.
 
     Returns (y_int float32 (M,N), CimStats).
     """
@@ -136,7 +150,20 @@ def _bitplane_matmul(x_int, w_int, cfg: CiMConfig, key):
 
     adc_cfg = cfg.adc_config()
     tree = cfg.search_tree()
-    res: ADCResult = convert(mav, adc_cfg, key=key, tree=tree)
+    if key is None:
+        res: ADCResult = convert(mav, adc_cfg, key=None, tree=tree)
+    else:
+        mismatch_key, cmp_key = jax.random.split(key)
+        ladder = make_reference_ladder(adc_cfg, mismatch_key)
+        row_ids = jnp.asarray(row_offset, jnp.int32) + jnp.arange(m, dtype=jnp.int32)
+        row_keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(cmp_key, row_ids)
+        res = jax.vmap(
+            lambda v_row, k_row: convert(
+                v_row, adc_cfg, key=k_row, tree=tree, ladder=ladder
+            ),
+            in_axes=(2, 0),
+            out_axes=2,
+        )(mav, row_keys)
     # floor reconstruction: digital output is the raw code scaled by one LSB,
     # zero-bias on empty tiles and exact whenever 2^adc_bits >= 2*rows
     v_hat = res.codes.astype(jnp.float32) / (1 << cfg.adc_bits) * adc_cfg.vdd

@@ -46,6 +46,11 @@ accesses because more weights stay resident. This package models that chip:
     ``measure_forward`` wall-clocks the fused collectives and
     ``pipeline.link_validation`` reports them next to the modeled link
     latency.
+  * :mod:`repro.fabric.autotune` — continuous batching: a bucketed LRU of
+    compiled graph programs (``BucketedGraphCache``) that zero-pads ragged
+    batches onto the fused path bit-exactly, plus a mesh/bucket autotuner
+    (``autotune_plan``) that searches the graph cost model for the cheapest
+    feasible serving plan given a request-mix histogram.
 
 Paper-figure correspondence: Fig. 1 (networking configurations) ->
 ``FabricConfig.mode``; Fig. 2 (pair SAR role swap) -> ``pair_sar`` groups;
@@ -55,6 +60,13 @@ pipeline's bank arbitration; Table I anchors the area/energy rollups.
 See ``docs/fabric.md`` for the full architecture guide.
 """
 
+from repro.fabric.autotune import (
+    AutotunePlan,
+    BucketedGraphCache,
+    autotune_plan,
+    autotune_section,
+    request_histogram,
+)
 from repro.fabric.execute import execute_linear, execute_matmul
 from repro.fabric.graph import (
     GraphProgram,
@@ -165,4 +177,9 @@ __all__ = [
     "sharded_fabric_report",
     "graph_section",
     "render_markdown",
+    "BucketedGraphCache",
+    "AutotunePlan",
+    "autotune_plan",
+    "autotune_section",
+    "request_histogram",
 ]

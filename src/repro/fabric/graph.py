@@ -428,7 +428,17 @@ class GraphProgram:
         # eager reference's exact arithmetic. Both guards survive the scan
         # body unchanged: qmax_f/one_f stay traced operands closed over by
         # the body, so XLA cannot specialize on them per iteration either.
-        def chip_fn(x_blk, qmax_f, one_f, *flat):
+        # mask_blk is this data-shard's (b_loc, 1, 1) slice of the pad-row
+        # mask: 1.0 on real rows, 0.0 on bucket padding. Multiplying it into
+        # every matmul node output keeps pad rows at exactly zero through the
+        # whole block stack — a noisy ADC turns a zero input row into nonzero
+        # codes (the half-LSB mav bias sits inside comparator sigma), which
+        # would otherwise leak into the GLOBAL absmax at the next
+        # re-quantization boundary and perturb real rows' scales. For real
+        # rows `y * 1.0` is bitwise identity, and a fused
+        # `fma(y, 1.0, residual) == round(y + residual)` — the same guard
+        # argument as one_f, so unpadded results are untouched.
+        def chip_fn(x_blk, qmax_f, one_f, mask_blk, *flat):
             key = flat[-1] if has_key else None
             di = jax.lax.axis_index("data")
             ci = jax.lax.axis_index("model")
@@ -465,8 +475,14 @@ class GraphProgram:
                             jax.random.fold_in(key, mm_idx0 + mm_idx)
                             if has_key else None
                         )
-                        chip_key = _chip_noise_key(nkey, di * C + ci) if has_key else None
-                        y_int, st = column_tile_matmul(x_int2, w_blk, cim, cols, key=chip_key)
+                        # K-shard index only: data chips are distinguished by
+                        # the global row ids (row_offset), so each row's noise
+                        # draws are invariant to the batch size and data split
+                        chip_key = _chip_noise_key(nkey, ci) if has_key else None
+                        y_int, st = column_tile_matmul(
+                            x_int2, w_blk, cim, cols, key=chip_key,
+                            row_offset=di * x_int2.shape[0],
+                        )
                         conversions = conversions + st.conversions
                         comparisons = comparisons + st.comparisons
                         if node.combine == "scatter":
@@ -486,7 +502,9 @@ class GraphProgram:
                             if collectives:
                                 y_int = jax.lax.psum(y_int, "model")
                         y = y_int * scale * sw_blk * one_f  # one_f: no FMA across
-                        vals[node.name] = y.reshape(b_loc, s, -1)  # the CiM boundary
+                        # the CiM boundary; mask_blk re-zeroes pad rows the
+                        # noisy ADC lifted off zero (see chip_fn comment)
+                        vals[node.name] = y.reshape(b_loc, s, -1) * mask_blk
                         mm_idx += 1
                     elif node.op == "norm":
                         h = vals[node.inputs[0]]
@@ -559,7 +577,7 @@ class GraphProgram:
                 comparisons = jax.lax.psum(comparisons, ("data", "model"))
             return out, conversions, comparisons
 
-        in_specs: List = [P("data", None, "model"), P(), P()]
+        in_specs: List = [P("data", None, "model"), P(), P(), P("data", None, None)]
         if scan:
             # stacked block weights: leading layer axis unsharded, the rest
             # sharded exactly like the unrolled per-layer specs
@@ -597,9 +615,14 @@ class GraphProgram:
         self._fns[cache_key] = fn
         return fn
 
-    def _prepare(self, x, weights, key):
+    def _prepare(self, x, weights, key, real_rows=None):
         """Validate shapes, quantize matmul weights host-side (exactly the
-        reference loop's front-end), and assemble the fused argument list."""
+        reference loop's front-end), and assemble the fused argument list.
+
+        ``real_rows`` marks the first ``real_rows`` batch rows as real and the
+        rest as bucket padding (``fabric.autotune``): the pad-row mask operand
+        zeroes padded rows at every matmul node so they cannot perturb the
+        global quantization scales real rows see."""
         shapes = self.weight_shapes()
         missing = sorted(set(shapes) - set(weights))
         if missing:
@@ -620,7 +643,19 @@ class GraphProgram:
             (1 << (self.cim.a_bits - 1)) - 1 if self.cim.a_signed
             else (1 << self.cim.a_bits) - 1
         )
-        flat = [jnp.float32(qmax), jnp.float32(1.0)]
+        if real_rows is None:
+            mask = jnp.ones((x.shape[0], 1, 1), jnp.float32)
+        else:
+            if not 1 <= real_rows <= x.shape[0]:
+                raise ValueError(
+                    f"real_rows={real_rows} outside [1, batch={x.shape[0]}]"
+                )
+            mask = (
+                (jnp.arange(x.shape[0]) < real_rows)
+                .astype(jnp.float32)
+                .reshape(-1, 1, 1)
+            )
+        flat = [jnp.float32(qmax), jnp.float32(1.0), mask]
         if self.scan_layers:
             for nd in self.block_graph.weighted_nodes():
                 w = weights[nd.name]
@@ -664,9 +699,9 @@ class GraphProgram:
             return unstack_block_weights(weights, self.n_blocks)
         return weights
 
-    def _fused_args(self, x, weights, key):
+    def _fused_args(self, x, weights, key, real_rows=None):
         """The fused callable's concrete argument tuple (measure_forward)."""
-        return (x, *self._prepare(x, weights, key))
+        return (x, *self._prepare(x, weights, key, real_rows=real_rows))
 
     def fused_available(self, x) -> bool:
         """Whether the fused shard_map path can run THIS input — the
@@ -677,41 +712,60 @@ class GraphProgram:
             return False
         return x.shape[0] % self.chip_mesh.data == 0
 
-    def __call__(self, x, weights, key: Optional[jax.Array] = None, return_stats: bool = False):
-        if self.backend != "shard_map":
-            _record_request_fallback("fabric.graph", self)
-            _record_request("fabric.graph", self, 0, fused=False)
-            return per_node_forward(
-                x, self._unrolled_weights(weights), self.graph, self.placements,
-                self.chip_mesh, self.cim,
-                key=key, backend="sequential", return_stats=return_stats,
-            )
-        flat = self._prepare(x, weights, key)
-        if x.shape[0] % self.chip_mesh.data:
-            if self.requested_backend == "shard_map":
-                raise ValueError(
-                    f"fused graph program unavailable: batch {x.shape[0]} is "
-                    f"not divisible by the data axis ({self.chip_mesh.data})"
+    def __call__(self, x, weights, key: Optional[jax.Array] = None,
+                 return_stats: bool = False, real_rows: Optional[int] = None):
+        """Run the program. ``real_rows`` (``fabric.autotune``'s bucketed
+        batches) declares that only the first ``real_rows`` batch rows are
+        real and the rest are zero padding up to a bucket boundary: the fused
+        program masks pad rows out of every matmul node, the returned logits
+        are sliced back to ``real_rows``, and stats/metrics/EMA account only
+        the real rows — so a padded run is bit-exact to, and reports exactly
+        like, the unpadded reference."""
+        b = x.shape[0]
+        if real_rows is not None and not 1 <= real_rows <= b:
+            raise ValueError(f"real_rows={real_rows} outside [1, batch={b}]")
+        if self.backend != "shard_map" or b % self.chip_mesh.data:
+            if self.backend == "shard_map":
+                # fused program exists but THIS batch is ragged
+                if self.requested_backend == "shard_map":
+                    raise ValueError(
+                        f"fused graph program unavailable: batch {b} is "
+                        f"not divisible by the data axis ({self.chip_mesh.data})"
+                    )
+                # the documented ragged-batch path: fall back to the per-node
+                # reference loop (bit-identical semantics, host dispatch)
+                record_fallback(
+                    "fabric.graph", REASON_RAGGED_BATCH,
+                    f"batch {b} % data axis {self.chip_mesh.data} != 0",
                 )
-            # the documented ragged-batch path: fall back to the per-node
-            # reference loop (bit-identical semantics, host dispatch)
-            record_fallback(
-                "fabric.graph", REASON_RAGGED_BATCH,
-                f"batch {x.shape[0]} % data axis {self.chip_mesh.data} != 0",
-            )
+            else:
+                _record_request_fallback("fabric.graph", self)
             _record_request("fabric.graph", self, 0, fused=False)
+            # pad rows are pure bucket filler — the reference loop only ever
+            # sees the real rows (per-row noise keys make that equivalent)
+            x_ref = x if real_rows is None else x[:real_rows]
             return per_node_forward(
-                x, self._unrolled_weights(weights), self.graph, self.placements,
-                self.chip_mesh, self.cim,
+                x_ref, self._unrolled_weights(weights), self.graph,
+                self.placements, self.chip_mesh, self.cim,
                 key=key, backend="sequential", return_stats=return_stats,
             )
-        _record_request("fabric.graph", self, x.shape[0] * x.shape[1], fused=True)
+        flat = self._prepare(x, weights, key, real_rows=real_rows)
+        rows = b if real_rows is None else real_rows
+        _record_request("fabric.graph", self, rows * x.shape[1], fused=True)
         with obs_trace.span(
             "fabric.graph.forward", n_matmuls=self.n_layers,
             mesh=f"{self.chip_mesh.data}x{self.chip_mesh.model}",
-            tokens=x.shape[0] * x.shape[1],
+            tokens=rows * x.shape[1],
         ), obs_trace.annotate("fabric.graph.fused"):
             y, conversions, comparisons = self._fused(key is not None)(x, *flat)
+        if real_rows is not None:
+            y = y[:real_rows]
+            # conversions are per-row-constant (planes x k-tiles x columns
+            # per row), so real_rows/b rescaling is exact; comparator counts
+            # are data-dependent, so the pad-row share is removed
+            # proportionally (pad rows digitize all-zero mavs)
+            conversions = conversions * real_rows // b
+            comparisons = comparisons * real_rows // b
         if return_stats:
             return y, CimStats(conversions, comparisons)
         return y

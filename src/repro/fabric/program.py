@@ -107,7 +107,13 @@ def _record_request(component: str, program, m: int, fused: bool) -> None:
         )
         obs_metrics.inc(
             "fabric_link_bits_total",
-            sum(sp.crosschip_bits_per_pass for sp in program.placements),
+            # crosschip_bits_per_pass is priced at the placement's planned M;
+            # scale to the rows actually served — exact, since the bits are
+            # (k_splits-1) * M * N * psum_bits, linear in M
+            sum(
+                sp.crosschip_bits_per_pass * m // sp.m
+                for sp in program.placements
+            ),
             help="Cross-chip reduce-scatter bits moved per executed matmul.",
         )
 
@@ -351,8 +357,13 @@ class FabricProgram:
                 scale = jnp.where(absmax > 0, absmax / qmax_f, 1.0)
                 x_int = jnp.clip(jnp.round(h / scale), lo, qmax)
                 lkey = jax.random.fold_in(key, i) if has_key else None
-                chip_key = _chip_noise_key(lkey, di * C + ci) if has_key else None
-                y_int, st = column_tile_matmul(x_int, w_blk, cim, cols, key=chip_key)
+                # K-shard index only: data chips differ via the global row
+                # ids (row_offset), keeping each row's draws split-invariant
+                chip_key = _chip_noise_key(lkey, ci) if has_key else None
+                y_int, st = column_tile_matmul(
+                    x_int, w_blk, cim, cols, key=chip_key,
+                    row_offset=di * x_int.shape[0],
+                )
                 conversions = conversions + st.conversions
                 comparisons = comparisons + st.comparisons
                 if C > 1:

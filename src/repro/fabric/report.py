@@ -417,6 +417,23 @@ def render_markdown(report: dict, max_layers: Optional[int] = 24) -> str:
             + (f" (calibration ratio {ratio:.3g})" if ratio is not None else "")
         )
         out += ["", line]
+    if "autotune" in report:
+        at = report["autotune"]
+        line = (
+            f"**autotune:** mesh {at['mesh']}, buckets "
+            f"{'/'.join(str(b) for b in at['buckets'])}; expected "
+            f"{at['expected_latency_s']*1e3:.3g} ms/request vs baseline "
+            f"{at['baseline_latency_s']*1e3:.3g} ms "
+            f"({at['speedup_vs_baseline']:.2f}x, {at['searched']} plans searched)"
+        )
+        cachest = at.get("cache")
+        if cachest:
+            line += (
+                f"; cache {cachest['hits']} hit(s) / {cachest['misses']} "
+                f"miss(es), {cachest['pad_waste_rows']} pad row(s), "
+                f"{cachest['compiles']} compile(s)"
+            )
+        out += ["", line]
     if "paper_ratios" in report:
         pr = report["paper_ratios"]
         iso = report["iso_area"]

@@ -249,6 +249,12 @@ def _chip_noise_key(key: Optional[jax.Array], chip_index):
     reproduces the unsharded path's per-tile ``fold_in(key, nt)`` draws
     bit-for-bit while every other chip gets an independent stream.
 
+    ``chip_index`` is the K-shard (model-axis) index only: chips along the
+    data axis share the key and are distinguished instead by the global row
+    ids threaded through ``column_tile_matmul``'s ``row_offset``, which makes
+    each batch row's draws invariant to the batch size and data split — the
+    property ``fabric.autotune``'s zero-padded bucketed batches rely on.
+
     Accepts a Python int (sequential backend) or a traced ``axis_index``
     scalar (shard_map backend); both derivations are identical, which is what
     keeps the two backends' noise draws equal.
@@ -347,11 +353,15 @@ def _shard_map_matmul(x_int, w_int, sx, sw, sharded: ShardedPlacement, cim: CiMC
     def chip_fn(x_blk, w_blk, sx_, sw_, *maybe_key):
         di = jax.lax.axis_index("data")
         ci = jax.lax.axis_index("model")
-        chip_key = (
-            _chip_noise_key(maybe_key[0], di * k_splits + ci) if has_key else None
-        )
+        # the chip key carries only the K-shard index: data-axis chips are
+        # told apart by the global ROW ids they pass down (row_offset), so a
+        # row's draws do not move when the batch split changes
+        chip_key = _chip_noise_key(maybe_key[0], ci) if has_key else None
         # this chip's K-partial, (m_shard, N) — the one shared inner loop
-        y_local, st = column_tile_matmul(x_blk, w_blk, cim, cols, key=chip_key)
+        y_local, st = column_tile_matmul(
+            x_blk, w_blk, cim, cols, key=chip_key,
+            row_offset=di * x_blk.shape[0],
+        )
         conversions, comparisons = st.conversions, st.comparisons
         if k_splits > 1:
             if n % k_splits == 0:
@@ -508,9 +518,10 @@ def execute_sharded_matmul(
                 total = None
                 for c in range(k_splits):
                     k0, k1 = _k_slice(k, fabric.rows, k_tiles, k_splits, c)
-                    chip_key = _chip_noise_key(key, d * k_splits + c)
+                    chip_key = _chip_noise_key(key, c)
                     y_c, st = column_tile_matmul(
-                        x_d[:, k0:k1], w_int[k0:k1], cim, cols, key=chip_key
+                        x_d[:, k0:k1], w_int[k0:k1], cim, cols,
+                        key=chip_key, row_offset=m0,
                     )
                     conversions = conversions + st.conversions
                     comparisons = comparisons + st.comparisons

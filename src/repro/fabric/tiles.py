@@ -72,15 +72,21 @@ def column_tile_matmul(
     cim: CiMConfig,
     cols: int,
     key: Optional[jax.Array] = None,
+    row_offset=0,
 ) -> Tuple[jnp.ndarray, CimStats]:
     """Execute one chip's quantized block tile-by-tile over its output columns.
 
     ``x_int``: (M, K) integer-valued activations; ``w_int``: (K, N)
     integer-valued weights (this chip's K-shard). Output-column tile ``nt``
     covers columns ``[nt*cols, (nt+1)*cols)`` and draws its ADC noise from
-    ``fold_in(key, nt)`` — the derivation every fabric executor shares, which
+    ``fold_in(key, nt)`` then per-row ``fold_in(·, row_offset + i)`` inside
+    ``_bitplane_matmul`` — the derivation every fabric executor shares, which
     is what keeps the single-chip, sequential-chip-loop, shard_map, and fused
-    whole-model paths bit-for-bit interchangeable.
+    whole-model paths bit-for-bit interchangeable. ``row_offset`` is the
+    global index of ``x_int``'s first row (data-shard callers pass their
+    shard's start row), making each row's draws invariant to the batch shape
+    and the data split — the contract ``fabric.autotune``'s zero-padded
+    bucketed batches rely on.
 
     Returns the UNSCALED integer-valued result ``(M, N)`` plus
     :class:`CimStats` (actual counts in ``bitplane`` mode, analytic in
@@ -115,7 +121,7 @@ def column_tile_matmul(
     for nt in range(n_tiles):
         n0, n1 = nt * cols, min((nt + 1) * cols, n)
         tkey = jax.random.fold_in(key, nt) if key is not None else None
-        y_t, st = _bitplane_matmul(x_int, w_int[:, n0:n1], cim, tkey)
+        y_t, st = _bitplane_matmul(x_int, w_int[:, n0:n1], cim, tkey, row_offset)
         conversions = conversions + st.conversions
         comparisons = comparisons + st.comparisons
         parts.append(y_t)

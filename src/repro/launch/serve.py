@@ -14,6 +14,7 @@ from __future__ import annotations
 import argparse
 import contextlib
 import dataclasses
+import functools
 import time
 from typing import Optional
 
@@ -28,7 +29,26 @@ from repro.models import build_model
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
-__all__ = ["ServeSettings", "serve_batch", "parse_fabric_mesh"]
+__all__ = ["ServeSettings", "serve_batch", "parse_fabric_mesh", "compiled_model"]
+
+
+@functools.lru_cache(maxsize=8)
+def compiled_model(cfg: ModelConfig, seed: int):
+    """Build + initialize ``cfg`` and wrap its prefill/decode in ``jax.jit``
+    ONCE per ``(cfg, seed)``.
+
+    ``serve_batch`` used to rebuild the model and re-wrap ``jax.jit`` on
+    every call, which discarded the trace cache and re-traced (and
+    re-compiled) prefill and decode each time; hoisting the wrappers here
+    makes repeated ``serve_batch`` calls — the continuous-batching serving
+    loop — reuse the compiled executables. ``ModelConfig`` is a frozen
+    dataclass, so it keys the LRU directly.
+
+    Returns ``(model, params, jit_prefill, jit_decode)``.
+    """
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return model, params, jax.jit(model.prefill), jax.jit(model.decode_step)
 
 
 def parse_fabric_mesh(spec: str) -> tuple:
@@ -84,16 +104,12 @@ def serve_batch(
     link-bit totals, and the measured-vs-modeled link latency with the named
     ``link_clock_calibration`` constant — read back from the live registry.
     """
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(st.seed))
+    model, params, prefill, decode = compiled_model(cfg, st.seed)
     rng = np.random.default_rng(st.seed)
     if prompts is None:
         prompts = rng.integers(0, cfg.vocab, (st.batch, st.prompt_len)).astype(np.int32)
     b, s = prompts.shape
     total = s + st.gen_len
-
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step)
 
     t0 = time.time()
     with obs_trace.span("serve.prefill", batch=b, prompt_len=s):
@@ -259,6 +275,15 @@ def main():
         "(dense/moe families only)",
     )
     ap.add_argument(
+        "--fabric-autotune",
+        action="store_true",
+        help="pick the (data x model) mesh and batch-bucket boundaries from "
+        "the graph cost model (repro.fabric.autotune) for a synthetic "
+        "ragged request mix, then validate a ragged batch through the "
+        "bucketed fused-program cache (bit-exact to the per-node "
+        "reference after pad-slicing)",
+    )
+    ap.add_argument(
         "--obs-log",
         default=None,
         metavar="PATH",
@@ -311,8 +336,19 @@ def _serve_main(args, ap):
         cfg = dc.replace(cfg, cim=CiMConfig(mode=args.cim, ste=False))
     st = ServeSettings(batch=args.batch, prompt_len=args.prompt_len, gen_len=args.gen_len)
 
-    if (args.fabric_chips > 1 or args.fabric_mesh or args.fabric_program) and not args.fabric:
-        ap.error("--fabric-chips/--fabric-mesh/--fabric-program require --fabric")
+    if (
+        args.fabric_chips > 1 or args.fabric_mesh or args.fabric_program
+        or args.fabric_autotune
+    ) and not args.fabric:
+        ap.error(
+            "--fabric-chips/--fabric-mesh/--fabric-program/--fabric-autotune "
+            "require --fabric"
+        )
+    if args.fabric_autotune and cfg.family not in ("dense", "moe"):
+        ap.error(
+            f"--fabric-autotune needs a matmul-graph family (dense/moe); "
+            f"{args.arch} is {cfg.family!r}"
+        )
     if args.fabric_scan and not args.fabric_program:
         ap.error("--fabric-scan requires --fabric-program")
     if args.fabric_scan and cfg.family not in ("dense", "moe"):
@@ -454,6 +490,56 @@ def _serve_main(args, ap):
                 + f", maxdiff {maxdiff:.2e} vs {ref_name}; collectives "
                 + (f"{mc*1e3:.3g} ms wall" if mc is not None else "n/a")
                 + f" vs modeled link {measured['modeled_link_s']*1e3:.3g} ms"
+            )
+
+        if args.fabric_autotune:
+            # cost-model-driven continuous batching: pick mesh + bucket
+            # boundaries for a synthetic ragged request mix (every batch
+            # size up to --batch, uniform — a stand-in for a measured
+            # trace), then validate one ragged batch through the bucketed
+            # fused-program cache against the per-node reference
+            import numpy as _np
+
+            from repro.fabric import (
+                BucketedGraphCache,
+                autotune_plan,
+                autotune_section,
+                request_histogram,
+            )
+
+            at_cim = _CiM(
+                mode="bitplane", a_bits=4, w_bits=4, adc_bits=fb.adc_bits,
+                rows=fb.rows, ste=False,
+            )
+            hist = request_histogram(range(1, st.batch + 1))
+            plan = autotune_plan(
+                cfg, hist, cm.n_chips, fb, cim=at_cim,
+                default_mesh=(mesh_d, mesh_m),
+            )
+            plan_cm = ChipMeshConfig(data=plan.data, model=plan.model, fabric=fb)
+            cache = BucketedGraphCache(
+                cfg, plan_cm, at_cim, buckets=plan.buckets,
+                block_only=not args.fabric_scan, scan_layers=args.fabric_scan,
+            )
+            # a batch the plan's data axis does NOT divide, when one exists
+            b_val = next(
+                (b for b in range(st.batch, 0, -1) if b % plan.data),
+                st.batch,
+            )
+            prog = cache.program_for(cache.bucket_for(b_val))
+            w_at = prog.random_weights(_jax.random.PRNGKey(3))
+            x_at = _jax.random.normal(_jax.random.PRNGKey(2), (b_val, 1, prog.d_in))
+            y_bucketed = cache(x_at, w_at)
+            y_ref = prog.reference_forward(x_at, w_at)
+            at_diff = float(_np.abs(_np.asarray(y_bucketed) - _np.asarray(y_ref)).max())
+            rollup["autotune"] = autotune_section(plan, cache)
+            print(
+                f"[serve] autotune: mesh {plan.data}x{plan.model}, buckets "
+                f"{list(plan.buckets)} ({plan.searched} plans searched); "
+                f"expected {plan.expected_latency_s*1e3:.3g} ms/request vs "
+                f"baseline {plan.baseline_latency_s*1e3:.3g} ms; ragged "
+                f"B={b_val} via bucketed fused path, maxdiff {at_diff:.2e} "
+                f"vs per-node reference"
             )
 
     out = serve_batch(cfg, st, fabric_rollup=rollup)

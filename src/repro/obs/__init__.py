@@ -24,6 +24,7 @@ from repro.obs.fallback import (
     FALLBACK_REASONS,
     REASON_INELIGIBLE,
     REASON_INSUFFICIENT_DEVICES,
+    REASON_NO_BUCKET,
     REASON_RAGGED_BATCH,
     REASON_REPLICATION_FALLBACK,
     REASON_REQUESTED_SEQUENTIAL,
@@ -74,6 +75,7 @@ __all__ = [
     "REASON_REPLICATION_FALLBACK",
     "REASON_REQUESTED_SEQUENTIAL",
     "REASON_INELIGIBLE",
+    "REASON_NO_BUCKET",
     "FALLBACK_REASONS",
     "classify_fallback",
     "record_fallback",

@@ -22,6 +22,7 @@ __all__ = [
     "REASON_REPLICATION_FALLBACK",
     "REASON_REQUESTED_SEQUENTIAL",
     "REASON_INELIGIBLE",
+    "REASON_NO_BUCKET",
     "FALLBACK_REASONS",
     "classify_fallback",
     "record_fallback",
@@ -39,6 +40,10 @@ REASON_REPLICATION_FALLBACK = "replication_fallback"
 REASON_REQUESTED_SEQUENTIAL = "requested_sequential"
 #: Catch-all for any other compile-time eligibility problem.
 REASON_INELIGIBLE = "ineligible"
+#: ``fabric.autotune``'s bucketed program cache had no bucket large enough
+#: for the request batch — unlike ``ragged_batch``, a ragged batch that DOES
+#: fit a bucket is padded, served fused, and records a bucket hit instead.
+REASON_NO_BUCKET = "no_bucket"
 
 FALLBACK_REASONS = (
     REASON_RAGGED_BATCH,
@@ -46,6 +51,7 @@ FALLBACK_REASONS = (
     REASON_REPLICATION_FALLBACK,
     REASON_REQUESTED_SEQUENTIAL,
     REASON_INELIGIBLE,
+    REASON_NO_BUCKET,
 )
 
 

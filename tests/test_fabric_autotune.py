@@ -1,0 +1,314 @@
+"""Continuous batching (``repro.fabric.autotune``): bucketed LRU program
+cache keying/eviction, padded-vs-unpadded bit-exactness (noisy ADC included
+— pad rows must not consume noise-key draws), pad-row exclusion from the
+conversion/comparison stats and obs counter totals, bucket hit/miss/pad
+accounting (a ragged batch landing in a bucket is a hit, NOT a
+``ragged_batch`` fallback; only a too-large batch records ``no_bucket``),
+and the cost-model autotuner (GQA-violating mesh rejection, plan cost never
+above the default mesh's). ``tests/conftest.py`` forces 8 host devices."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.configs.base import ModelConfig
+from repro.core.cim_linear import CiMConfig
+from repro.fabric import (
+    AutotunePlan,
+    BucketedGraphCache,
+    ChipMeshConfig,
+    FabricConfig,
+    autotune_plan,
+    autotune_section,
+    request_histogram,
+    transformer_graph_weights,
+)
+from repro.models.transformer import init_transformer
+
+FB = FabricConfig(mode="pair_sar", rows=16, cols=32, n_arrays=8)
+CIM_BP = CiMConfig(mode="bitplane", a_bits=4, w_bits=4, adc_bits=5, rows=16, ste=False)
+NOISY = dataclasses.replace(CIM_BP, comparator_sigma=0.05)
+
+# graph-eligible on a 2x2 mesh: every K tile-aligns (64/128 % (2*16) == 0)
+# and q/kv heads (4/2) divide the model axis
+CFG = ModelConfig(
+    name="autotune-test", family="dense", n_layers=1, d_model=64, vocab=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, pad_vocab_multiple=16,
+    param_dtype="float32", compute_dtype="float32",
+)
+MESH = ChipMeshConfig(data=2, model=2, fabric=FB)
+SEQ = 4
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _drop_compiled_programs():
+    """This module compiles many bucketed graph-program variants; release
+    their executables when it finishes so the later (also compile-heavy)
+    suite modules don't accumulate on top of them in the one shared
+    process."""
+    yield
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="module")
+def real_weights():
+    params = init_transformer(jax.random.PRNGKey(0), CFG)
+    return transformer_graph_weights(params, CFG)
+
+
+def _x(b: int, seed: int = 0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, SEQ, CFG.d_model))
+
+
+# ---------------------------------------------------------------------------
+# histogram + bucket validation
+# ---------------------------------------------------------------------------
+
+
+def test_request_histogram_collapses_and_validates():
+    assert request_histogram([3, 1, 3, 4]) == {1: 1, 3: 2, 4: 1}
+    with pytest.raises(ValueError, match=">= 1"):
+        request_histogram([2, 0])
+
+
+def test_bucket_boundaries_must_be_data_multiples():
+    with pytest.raises(ValueError, match="multiple of the data axis"):
+        BucketedGraphCache(CFG, MESH, CIM_BP, buckets=(3,), seq=SEQ)
+    with pytest.raises(ValueError, match="at least one bucket"):
+        BucketedGraphCache(CFG, MESH, CIM_BP, buckets=(), seq=SEQ)
+    cache = BucketedGraphCache(CFG, MESH, CIM_BP, buckets=(4, 2, 4), seq=SEQ)
+    assert cache.buckets == (2, 4)  # sorted, deduped
+    assert cache.bucket_for(1) == 2
+    assert cache.bucket_for(2) == 2
+    assert cache.bucket_for(3) == 4
+    assert cache.bucket_for(5) is None
+
+
+# ---------------------------------------------------------------------------
+# LRU keying / eviction
+# ---------------------------------------------------------------------------
+
+
+def test_lru_keying_and_eviction():
+    cache = BucketedGraphCache(
+        CFG, MESH, CIM_BP, buckets=(2, 4, 6), seq=SEQ, capacity=2
+    )
+    p2 = cache.program_for(2)
+    p4 = cache.program_for(4)
+    assert cache.compiles == 2 and cache.evictions == 0
+    # a repeat touch is a cache hit on the SAME compiled program object
+    assert cache.program_for(2) is p2
+    assert cache.program_for(4) is p4
+    assert cache.compiles == 2
+    # capacity 2: inserting bucket 6 evicts the least recently used (2,
+    # because 4 was touched last)
+    cache.program_for(6)
+    assert cache.compiles == 3 and cache.evictions == 1
+    assert cache.program_for(4) is p4  # still resident
+    assert cache.compiles == 3
+    # bucket 2 was evicted — coming back recompiles a NEW program
+    assert cache.program_for(2) is not p2
+    assert cache.compiles == 4 and cache.evictions == 2
+    # noisy ADC keys a separate cache entry at the same padded batch
+    cache.program_for(2, noisy=True)
+    assert cache.compiles == 5
+    assert cache.stats()["resident_programs"] == 2
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness of the padded bucketed path
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_bucket_bit_exact_noiseless(real_weights):
+    """B=3 on the 2x2 mesh: padded to the 4-bucket, served fused, sliced —
+    bit-exact to the unpadded per-node reference (the acceptance shape)."""
+    cache = BucketedGraphCache(CFG, MESH, CIM_BP, buckets=(4,), seq=SEQ)
+    prog = cache.program_for(4)
+    assert prog.backend == "shard_map"
+    y = np.asarray(cache(_x(3), real_weights))
+    y_ref = np.asarray(prog.reference_forward(_x(3), real_weights))
+    assert y.shape == y_ref.shape
+    assert (y == y_ref).all()
+
+
+def test_ragged_bucket_bit_exact_noisy_adc(real_weights):
+    """Noisy ADC: pad rows must not consume noise draws — per-row keys
+    derive each row's comparator draws from its GLOBAL row id, so padding
+    3 -> 4 leaves rows 0..2 with exactly the draws of the unpadded run."""
+    nk = jax.random.PRNGKey(7)
+    cache = BucketedGraphCache(CFG, MESH, NOISY, buckets=(4,), seq=SEQ)
+    y = np.asarray(cache(_x(3), real_weights, key=nk))
+    y_ref = np.asarray(
+        cache.program_for(4, noisy=True).reference_forward(
+            _x(3), real_weights, key=nk
+        )
+    )
+    assert (y == y_ref).all()
+
+
+def test_pad_rows_do_not_shift_noise_draws():
+    """The draw-invariance property the bucketed path rests on, tested at
+    the executor level: a row's comparator draws derive from its GLOBAL row
+    id (``fold_in(cmp_key, row_offset + i)``), so truncating the batch or
+    slicing it at an offset cannot re-deal any surviving row's draws."""
+    from repro.core.cim_linear import quantize_symmetric
+    from repro.fabric.tiles import column_tile_matmul
+
+    key = jax.random.PRNGKey(5)
+    x_int, _ = quantize_symmetric(
+        jax.random.normal(jax.random.PRNGKey(1), (6, 32)), 4, True
+    )
+    w_int, _ = quantize_symmetric(
+        jax.random.normal(jax.random.PRNGKey(2), (32, 24)), 4, True, per_axis=-1
+    )
+    y6, _ = column_tile_matmul(x_int, w_int, NOISY, cols=8, key=key)
+    # shorter batch, same global rows 0..3
+    y4, _ = column_tile_matmul(x_int[:4], w_int, NOISY, cols=8, key=key)
+    np.testing.assert_array_equal(np.asarray(y6)[:4], np.asarray(y4))
+    # offset slice, same global rows 2..5 (a data shard starting at row 2)
+    y_off, _ = column_tile_matmul(
+        x_int[2:], w_int, NOISY, cols=8, key=key, row_offset=2
+    )
+    np.testing.assert_array_equal(np.asarray(y6)[2:], np.asarray(y_off))
+    # the noise is real: a different key must change the noisy result
+    y_other, _ = column_tile_matmul(
+        x_int, w_int, NOISY, cols=8, key=jax.random.PRNGKey(99)
+    )
+    assert (np.asarray(y6) != np.asarray(y_other)).any()
+
+
+# ---------------------------------------------------------------------------
+# pad-row exclusion from stats / counters
+# ---------------------------------------------------------------------------
+
+
+def test_padded_stats_equal_unpadded_fused(real_weights):
+    """B=2 is mesh-aligned, so it can run fused both unpadded (direct) and
+    padded 2 -> 4 (via the bucket cache): logits AND CimStats must match —
+    pad rows contribute zero conversions/comparisons to the report."""
+    cache = BucketedGraphCache(CFG, MESH, CIM_BP, buckets=(4,), seq=SEQ)
+    prog_direct = cache.program_for(4)  # same program, different batch
+    y_pad, st_pad = cache(_x(2), real_weights, return_stats=True)
+    y_ref, st_ref = prog_direct(_x(2), real_weights, return_stats=True)
+    assert (np.asarray(y_pad) == np.asarray(y_ref)).all()
+    assert int(st_pad.conversions) == int(st_ref.conversions)
+    assert int(st_pad.comparisons) == int(st_ref.comparisons)
+    assert cache.pad_waste_rows == 2
+
+
+def test_padded_obs_totals_equal_unpadded(real_weights):
+    """The metric totals the fused path records (conversions, link bits,
+    tokens in the span) account only the 3 real rows of a padded 3 -> 4
+    request — both are per-row-constant, so they must sit at exactly 3/4 of
+    the aligned 4-row run's totals."""
+    cache = BucketedGraphCache(CFG, MESH, CIM_BP, buckets=(4,), seq=SEQ)
+    with obs.tracing() as tr, obs.collecting():
+        cache(_x(3), real_weights)
+        conv_pad = obs.get_value("fabric_conversions_total")
+        link_pad = obs.get_value("fabric_link_bits_total")
+    (span,) = [s for s in tr.spans if s["name"] == "fabric.graph.forward"]
+    assert span["attrs"]["tokens"] == 3 * SEQ  # NOT 4 * SEQ
+    with obs.collecting():
+        cache(_x(4), real_weights)  # aligned in-bucket: no padding
+        conv_4 = obs.get_value("fabric_conversions_total")
+        link_4 = obs.get_value("fabric_link_bits_total")
+    assert conv_pad > 0 and link_pad > 0
+    assert conv_pad * 4 == conv_4 * 3
+    assert link_pad * 4 == link_4 * 3
+
+
+def test_bucket_hit_miss_and_fallback_accounting(real_weights):
+    """Ragged-in-bucket = hit (0 ragged_batch fallbacks); larger than every
+    bucket = miss with the pinned ``no_bucket`` reason."""
+    cache = BucketedGraphCache(CFG, MESH, CIM_BP, buckets=(4,), seq=SEQ)
+    with obs.tracing() as tr, obs.collecting():
+        cache(_x(3), real_weights)  # ragged, fits the 4-bucket
+        assert obs.get_value("fabric_bucket_hits_total") == 1.0
+        assert obs.get_value("fabric_pad_waste_rows_total") == 1.0
+        assert obs.get_value("fabric_bucket_misses_total") == 0.0
+        assert obs.get_value(
+            "fabric_fallback_total", reason=obs.REASON_RAGGED_BATCH
+        ) == 0.0
+        assert obs.get_value("fabric_requests_total", path="fused") == 1.0
+
+        cache(_x(6), real_weights)  # exceeds every bucket
+        assert obs.get_value("fabric_bucket_misses_total") == 1.0
+        assert obs.get_value(
+            "fabric_fallback_total", reason=obs.REASON_NO_BUCKET
+        ) == 1.0
+        assert obs.get_value("fabric_requests_total", path="fused") == 1.0
+    ev = [e for e in tr.events if e["name"] == "fabric.fallback"]
+    assert [e["attrs"]["reason"] for e in ev] == [obs.REASON_NO_BUCKET]
+    assert "exceeds largest bucket 4" in ev[0]["attrs"]["detail"]
+    assert cache.stats()["hits"] == 1
+    assert cache.stats()["misses"] == 1
+    assert cache.stats()["pad_waste_rows"] == 1
+
+
+def test_no_bucket_fallback_result_matches_reference(real_weights):
+    cache = BucketedGraphCache(CFG, MESH, CIM_BP, buckets=(2,), seq=SEQ)
+    y = np.asarray(cache(_x(3), real_weights))
+    y_ref = np.asarray(
+        cache.program_for(2).reference_forward(_x(3), real_weights)
+    )
+    assert (y == y_ref).all()
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_rejects_gqa_violating_meshes():
+    """On 8 chips, meshes with model axis 4 or 8 violate the head-group
+    constraints (n_kv_heads=2 % 4, n_heads=4 % 8) — the plan's model axis
+    must divide the KV heads, and the infeasible default (1, 8) anchors the
+    baseline at the cheapest feasible single-bucket plan instead."""
+    plan = autotune_plan(
+        CFG, {1: 2, 3: 1}, 8, FB, seq=SEQ, cim=CIM_BP, default_mesh=(1, 8)
+    )
+    assert CFG.n_kv_heads % plan.model == 0
+    assert plan.model in (1, 2)
+    assert plan.expected_latency_s <= plan.baseline_latency_s
+    assert plan.baseline_latency_s < float("inf")
+    assert plan.speedup_vs_baseline >= 1.0
+
+
+def test_autotune_no_feasible_mesh_raises():
+    # 16 chips on the 8-device host: every (data, model) factorization
+    # fails graph_eligibility's device-count check
+    with pytest.raises(ValueError, match="no feasible"):
+        autotune_plan(CFG, {2: 1}, 16, FB, seq=SEQ, cim=CIM_BP)
+
+
+def test_autotune_plan_cost_le_default_and_deterministic():
+    hist = request_histogram([3, 1, 2, 3])
+    a = autotune_plan(CFG, hist, 4, FB, seq=SEQ, cim=CIM_BP, default_mesh=(2, 2))
+    b = autotune_plan(CFG, hist, 4, FB, seq=SEQ, cim=CIM_BP, default_mesh=(2, 2))
+    assert isinstance(a, AutotunePlan)
+    assert a == b  # frozen dataclass equality — the search is deterministic
+    assert a.expected_latency_s <= a.baseline_latency_s
+    assert a.searched > 0
+    # every bucket boundary is a positive multiple of the chosen data axis
+    assert all(bb > 0 and bb % a.data == 0 for bb in a.buckets)
+    # the largest observed batch always fits the largest bucket
+    assert a.buckets[-1] >= max(hist)
+
+
+def test_autotune_section_shape():
+    plan = autotune_plan(CFG, {2: 1}, 4, FB, seq=SEQ, cim=CIM_BP)
+    cache = BucketedGraphCache(
+        CFG, ChipMeshConfig(data=plan.data, model=plan.model, fabric=FB),
+        CIM_BP, buckets=plan.buckets, seq=SEQ,
+    )
+    sec = autotune_section(plan, cache)
+    assert sec["mesh"] == f"{plan.data}x{plan.model}"
+    assert sec["buckets"] == list(plan.buckets)
+    assert sec["speedup_vs_baseline"] >= 1.0
+    assert sec["cache"]["buckets"] == list(plan.buckets)
+    assert autotune_section(plan).get("cache") is None

@@ -179,9 +179,10 @@ def test_fallback_reason_strings_are_pinned():
     assert obs.REASON_REPLICATION_FALLBACK == "replication_fallback"
     assert obs.REASON_REQUESTED_SEQUENTIAL == "requested_sequential"
     assert obs.REASON_INELIGIBLE == "ineligible"
+    assert obs.REASON_NO_BUCKET == "no_bucket"
     assert obs.FALLBACK_REASONS == (
         "ragged_batch", "insufficient_devices", "replication_fallback",
-        "requested_sequential", "ineligible",
+        "requested_sequential", "ineligible", "no_bucket",
     )
     assert obs.classify_fallback(["host has 1 jax device(s) < 4 chips"]) \
         == "insufficient_devices"
